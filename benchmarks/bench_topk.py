@@ -1,0 +1,46 @@
+"""Paper Fig. 3 — gating top-k operator: HetuMoE's specialized kernel vs
+the framework-generic sort-based top-k.
+
+Three variants over (num_tokens × num_experts) grids:
+  sort      jax.lax.top_k (XLA's generic sort-based path = the PyTorch
+            baseline's role in Fig. 3)
+  itermax   the O(k·E) iterative-max formulation (what the Pallas kernel
+            computes, here as plain XLA ops)
+  pallas    the fused kernel in interpret mode (correctness path; its
+            TPU speedup comes from fusing softmax stats + selection into
+            one VMEM pass — see kernels/topk_gate.py)
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.gating import _topk
+from repro.kernels.topk_gate import fused_topk_gate
+
+
+def run(paper: bool = False):
+    grids = [(4096, 16), (16384, 16), (4096, 64), (16384, 64), (4096, 128)]
+    if not paper:
+        grids = [(1024, 16), (4096, 16), (1024, 64), (1024, 128)]
+    for k in (1, 2):
+        for S, E in grids:
+            logits = jax.random.normal(jax.random.PRNGKey(0), (S, E))
+
+            sort_fn = jax.jit(lambda x: jax.lax.top_k(x, k))
+            iter_fn = jax.jit(lambda x: _topk(x, k))
+            t_sort = timeit(sort_fn, logits)
+            t_iter = timeit(iter_fn, logits)
+            emit(f"topk/sort/k{k}/S{S}/E{E}", t_sort, "")
+            emit(f"topk/itermax/k{k}/S{S}/E{E}", t_iter,
+                 f"speedup_vs_sort={t_sort / t_iter:.2f}x")
+        # pallas interpret once per k (slow python loop — structural check)
+        S, E = grids[0]
+        logits = jax.random.normal(jax.random.PRNGKey(0), (S, E))
+        t_p = timeit(lambda x: fused_topk_gate(x, k, interpret=True), logits,
+                     warmup=1, iters=2)
+        emit(f"topk/pallas-interpret/k{k}/S{S}/E{E}", t_p,
+             "interpret-mode (CPU python loop; TPU perf via fusion)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Shared benchmark utilities.
+
+CPU NOTE: this container benchmarks on 1 CPU core (+ interpret-mode
+Pallas), so absolute times are NOT TPU numbers.  What transfers:
+relative comparisons between algorithmic variants (sort vs dense
+dispatch, iterative-max vs sort top-k) and the α–β model numbers.
+Dims default to a reduced profile; ``--paper`` uses the paper's exact
+16e / d=2048 / seq=1024 layer.
+"""
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (jit + block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

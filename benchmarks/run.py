@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--paper] [--only topk,layout,...]
+
+Output: ``name,us_per_call,derived`` CSV lines.  8 fake CPU devices so
+the AllToAll paths execute; absolute µs are CPU-emulation numbers — the
+cross-variant RATIOS and the α–β model outputs are the deliverables
+(see EXPERIMENTS.md).  Roofline numbers come from launch/dryrun.py, not
+from here.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+
+FIGS = {"topk": "3", "layout": "4", "alltoall": "7", "breakdown": "1",
+        "overall": "8"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="paper-exact dims (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: topk,layout,alltoall,breakdown,overall")
+    args = ap.parse_args()
+    from benchmarks import (bench_alltoall, bench_breakdown, bench_layout,
+                            bench_overall, bench_topk)
+    mods = {"topk": bench_topk, "layout": bench_layout,
+            "alltoall": bench_alltoall, "breakdown": bench_breakdown,
+            "overall": bench_overall}
+    wanted = args.only.split(",") if args.only else list(mods)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        print(f"# --- {name} (paper fig {FIGS[name]}) ---")
+        sys.stdout.flush()
+        mods[name].run(paper=args.paper)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the HetuMoE layer in 60 lines.
+
+Builds the paper's 16-expert MoE layer, routes a batch of tokens through
+every stage of Algorithm 1 (gate → layout transform → AllToAll → experts
+→ reverse transform), on an 8-device expert-parallel mesh (fake CPU
+devices), with both flat and hierarchical AllToAll.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import moe
+from repro.core.config import MoEConfig
+from repro.launch.mesh import make_smoke_mesh
+
+
+def main():
+    mesh = make_smoke_mesh((1, 8))              # 8-way expert parallelism
+    d_model, d_ff, E = 256, 512, 16
+    rng = jax.random.PRNGKey(0)
+
+    x = jax.random.normal(rng, (4, 128, d_model), jnp.float32)  # (B, S, d)
+
+    for a2a in ("flat", "hierarchical"):
+        cfg = MoEConfig(num_experts=E, gate="switch", capacity_factor=1.25,
+                        a2a=a2a, a2a_inner=4)
+        params = moe.init_moe_params(rng, cfg, d_model, d_ff, E,
+                                     act="swiglu", dtype=jnp.float32)
+        apply_fn = jax.jit(lambda p, v: moe.sharded_moe_apply(
+            mesh, cfg, p, v, num_experts=E, act="swiglu"))
+        y, aux_loss, metrics = apply_fn(params, x)
+        print(f"a2a={a2a:13s} out={y.shape} aux={float(aux_loss):.4f} "
+              f"max_load={float(metrics['expert_load_max']):.3f}")
+        if a2a == "flat":
+            y_flat = y
+        else:
+            np.testing.assert_allclose(np.asarray(y_flat), np.asarray(y),
+                                       rtol=1e-5, atol=1e-6)
+            print("flat == hierarchical ✓ (the paper's optimization is "
+                  "semantics-preserving; the win is in message aggregation)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Batched serving: prefill a batch of prompts, then decode step-by-step
+with a shared batched KV cache — the ``serve_step`` the decode dry-run
+shapes lower, driven end-to-end.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch dbrx-132b]
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import transformer as T
+from repro.serving.engine import make_prefill_step, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dbrx-132b",
+                    help="any assigned arch id (reduced smoke variant used)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = configs.smoke_config(args.arch)
+    assert cfg.has_decode, f"{args.arch} is encoder-only"
+    mesh = make_smoke_mesh((1, 1))
+    rng = jax.random.PRNGKey(0)
+    params = T.init_model(rng, cfg)
+    cache_len = args.prompt_len + args.gen
+
+    prefill = jax.jit(make_prefill_step(cfg, mesh, cache_len=cache_len))
+    step = jax.jit(make_serve_step(cfg, mesh))
+
+    # a batch of "requests" (synthetic prompts of equal length; ragged
+    # batching would left-pad and mask — same cache machinery)
+    prompts = jax.random.randint(rng, (args.batch, args.prompt_len),
+                                 0, cfg.vocab_size)
+    t0 = time.time()
+    logits, caches = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    toks = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    for _ in range(args.gen):
+        toks.append(tok)
+        logits, caches = step(params, tok, caches)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    out = jnp.concatenate(toks, axis=1)
+    print(f"arch={cfg.name}  batch={args.batch}")
+    print(f"prefill {args.prompt_len} toks: {t_prefill*1e3:.1f} ms")
+    print(f"decode  {args.gen} steps: {t_decode*1e3:.1f} ms "
+          f"({args.batch*args.gen/t_decode:.1f} tok/s batched)")
+    print("continuations[0]:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""DBRX 132B — fine-grained MoE, 16 experts top-4 every layer.
+[hf:databricks/dbrx-base]  40L, d_model=6144, 48H (GQA kv=8),
+expert d_ff=10752, vocab=100352.
+
+PRIMARY target for the paper's technique: exercises the k=4 top-k gating
+path + fine-grained expert parallelism (1 expert per model-rank on the
+16-wide model axis).  long_500k skipped (full attention).
+"""
+from repro.core.config import AttentionConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    d_ff=10752,
+    vocab_size=100352,
+    block_pattern=("moe",),
+    attention=AttentionConfig(num_heads=48, num_kv_heads=8,
+                              rope_theta=500_000.0),
+    moe=MoEConfig(num_experts=16, top_k=4, gate="topk",
+                  capacity_factor=1.25, d_ff_expert=10752,
+                  dispatch="sort", a2a="flat"),
+    act="swiglu",
+    source="DBRX [hf:databricks/dbrx-base]",
+)

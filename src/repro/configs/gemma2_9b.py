@@ -1,0 +1,28 @@
+"""Gemma-2 9B — alternating local/global attention, logit softcaps.
+[arXiv:2408.00118]  42L, d_model=3584, 16H (GQA kv=8, head_dim=256),
+d_ff=14336, vocab=256000.
+
+Local layers: sliding window 4096; global layers: full attention with
+attn-logit softcap 50 and final-logit softcap 30; GeGLU; tied + scaled
+embeddings.  long_500k runs as the documented variant with global layers
+capped to the local window.  No MoE (§Arch-applicability).
+"""
+from repro.core.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    num_layers=42,
+    d_model=3584,
+    d_ff=14336,
+    vocab_size=256000,
+    block_pattern=("local", "global"),
+    attention=AttentionConfig(num_heads=16, num_kv_heads=8, head_dim=256,
+                              rope_theta=10_000.0, attn_softcap=50.0),
+    local_window=4096,
+    final_softcap=30.0,
+    act="geglu",
+    tie_embeddings=True,
+    scale_embeddings=True,
+    source="Gemma 2 [arXiv:2408.00118]",
+)

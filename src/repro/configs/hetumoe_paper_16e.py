@@ -1,0 +1,28 @@
+"""The paper's own benchmark model (§3.2 "Overall Performance"):
+a 16-expert MoE layer, expert FFN hidden 2048, embedding dim 2048,
+sequence length 1024 — used by benchmarks/ to reproduce Figs. 1, 7, 8.
+
+Modeled as a 2-layer MoE transformer so the same launcher/dry-run
+machinery applies; the benchmarks also drive the bare MoE layer directly
+(PAPER_LAYER dims below).
+"""
+from repro.core.config import AttentionConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="hetumoe-paper-16e",
+    family="moe",
+    num_layers=2,
+    d_model=2048,
+    d_ff=2048,
+    vocab_size=50304,
+    block_pattern=("moe",),
+    attention=AttentionConfig(num_heads=16, num_kv_heads=16),
+    moe=MoEConfig(num_experts=16, top_k=1, gate="switch",
+                  capacity_factor=1.25, d_ff_expert=2048,
+                  dispatch="sort", a2a="flat"),
+    act="relu",
+    source="HetuMoE paper §3.2 (16e, d_ff=2048, seq=1024, d=2048)",
+)
+
+# Raw dims for the layer-level benchmarks (Figs. 1/7/8)
+PAPER_LAYER = dict(d_model=2048, d_ff=2048, num_experts=16, seq_len=1024)

@@ -1,0 +1,27 @@
+"""HuBERT X-Large — encoder-only audio transformer (wav2vec2 arch).
+[arXiv:2106.07447]  48L, d_model=1280, 16H (kv=16, MHA), d_ff=5120,
+vocab=504 (cluster targets).
+
+Audio carve-out: the mel-spectrogram + conv feature extractor (and its
+conv positional embedding) are STUBBED — input_specs() provides frame
+embeddings (B, S, d_model).  Encoder-only → bidirectional attention, NO
+decode step: decode_32k and long_500k skipped (DESIGN.md §skips).
+No MoE (§Arch-applicability).
+"""
+from repro.core.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    d_ff=5120,
+    vocab_size=504,
+    block_pattern=("attn",),
+    attention=AttentionConfig(num_heads=16, num_kv_heads=16, use_rope=False,
+                              causal=False),
+    encoder_only=True,
+    frontend="audio",
+    act="gelu",
+    source="HuBERT [arXiv:2106.07447]",
+)

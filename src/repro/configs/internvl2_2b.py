@@ -1,0 +1,25 @@
+"""InternVL2-2B — InternViT vision encoder + InternLM2 language backbone.
+[arXiv:2404.16821]  Backbone: 24L, d_model=2048, 16H (GQA kv=8),
+d_ff=8192, vocab=92553.
+
+VLM carve-out: the ViT + projector are STUBBED — input_specs() provides
+the merged patch+text embedding stream (B, S, d_model); this config is
+the language/decoder transformer that consumes it.  long_500k skipped
+(full attention).  No MoE (§Arch-applicability).
+"""
+from repro.core.config import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    d_ff=8192,
+    vocab_size=92553,
+    block_pattern=("attn",),
+    attention=AttentionConfig(num_heads=16, num_kv_heads=8,
+                              rope_theta=1_000_000.0),
+    frontend="vision",
+    act="swiglu",
+    source="InternVL2 [arXiv:2404.16821]",
+)

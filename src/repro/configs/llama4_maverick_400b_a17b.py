@@ -1,0 +1,27 @@
+"""Llama-4 Maverick 400B-A17B — interleaved dense/MoE, 128 experts top-1,
+shared expert, early fusion.  [hf:meta-llama/Llama-4-Scout-17B-16E family]
+48L, d_model=5120, 40H (GQA kv=8), expert d_ff=8192, vocab=202048.
+
+PRIMARY target for the paper's technique: 128-expert switch-style (top-1)
+routing — expert-parallel AllToAll dominates.  MoE every other layer
+(interleave step 2) + one always-on shared expert per MoE layer.
+long_500k skipped (full attention).
+"""
+from repro.core.config import AttentionConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    d_ff=8192,
+    vocab_size=202048,
+    block_pattern=("dense", "moe"),     # interleave_moe_layer_step = 2
+    attention=AttentionConfig(num_heads=40, num_kv_heads=8, qk_norm=True,
+                              rope_theta=500_000.0),
+    moe=MoEConfig(num_experts=128, top_k=1, gate="switch",
+                  capacity_factor=1.25, d_ff_expert=8192,
+                  num_shared_experts=1, dispatch="sort", a2a="flat"),
+    act="swiglu",
+    source="Llama 4 [hf:meta-llama/Llama-4-Scout-17B-16E]",
+)

@@ -1,0 +1,21 @@
+"""RWKV-6 "Finch" 1.6B — attention-free, data-dependent decay.
+[arXiv:2404.05892]  24L, d_model=2048, d_ff=7168, vocab=65536.
+
+§Arch-applicability: no MoE layers → HetuMoE's routing/AllToAll technique
+does not apply; uses the shared substrate (scan, sharding, launcher).
+Sub-quadratic (recurrent state) → runs long_500k.
+"""
+from repro.core.config import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    d_ff=7168,
+    vocab_size=65536,
+    block_pattern=("rwkv",),
+    rwkv=RWKVConfig(head_dim=64, chunk_size=128, decay_lora=64, mix_lora=32),
+    act="relu",          # RWKV channel-mix uses squared-relu-family activation
+    source="Finch: RWKV-6 [arXiv:2404.05892]",
+)

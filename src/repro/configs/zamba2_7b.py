@@ -1,0 +1,29 @@
+"""Zamba2-7B — hybrid: Mamba-2 backbone + SHARED attention blocks.
+[arXiv:2411.15242]  81L, d_model=3584, 32H (kv=32, MHA in the shared
+block), d_ff=14336, vocab=32000, ssm_state=64.
+
+Pattern: two Mamba-2 blocks then one Mamba-2 + shared-attention block
+(one attention param set reused at every occurrence, LoRA-adapted per
+occurrence — Zamba2's parameter-sharing trick).  Sub-quadratic: Mamba
+state is O(1); the shared attention uses a bounded ring window in
+long-context serving (documented variant) → runs long_500k.
+No MoE (§Arch-applicability).
+"""
+from repro.core.config import AttentionConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    d_ff=14336,
+    vocab_size=32000,
+    block_pattern=("mamba", "mamba", "mamba_sa"),
+    attention=AttentionConfig(num_heads=32, num_kv_heads=32,
+                              rope_theta=10_000.0),
+    ssm=SSMConfig(d_state=64, head_dim=64, expand=2, chunk_size=128,
+                  conv_width=4, n_groups=1),
+    local_window=4096,
+    act="swiglu",
+    source="Zamba2 [arXiv:2411.15242]",
+)

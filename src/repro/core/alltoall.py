@@ -1,0 +1,146 @@
+"""Flat and hierarchical AllToAll (paper §3.2, Figs. 5–7) on a named mesh axis.
+
+The paper's setting: N nodes × G GPUs, one NIC per node.  A flat NCCL
+AllToAll moves B/(N·G)-byte messages — latency-bound on the slow link.
+HetuMoE instead (1) aggregates intra-node over the fast fabric, (2)
+layout-transforms so each node's outbound data is contiguous per
+destination node, (3) runs the inter-node AllToAll with G²×-aggregated
+messages.
+
+TPU adaptation (DESIGN.md §2): the expert-parallel mesh axis is factored
+``model = outer × inner``.  ``inner`` spans the fast/contiguous ICI
+dimension (the "intra-node" fabric); ``outer`` crosses the slower
+dimension (long ICI hop or pod/DCN boundary).  Stage 1 is an AllToAll
+inside ``inner`` groups, a transpose (the layout transform — free in
+registers on TPU, a real kernel on GPU), then stage 2 inside ``outer``
+groups with inner×-aggregated messages.
+
+Both paths are FUNCTIONALLY IDENTICAL (asserted in tests); the win is in
+message count/size, captured by the α–β cost model below and in the
+roofline's collective term.
+
+Chunk convention: input ``(M, c, …)`` destination-major (chunk i → axis
+index i); output ``(M, c, …)`` source-major — the convention of
+``lax.all_to_all(tiled=True)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def flat_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """Vanilla AllToAll over the full named axis (NCCL-equivalent)."""
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+
+def _inner_groups(outer: int, inner: int) -> Sequence[Sequence[int]]:
+    """Groups of consecutive ranks — one per 'node'."""
+    return [[o * inner + i for i in range(inner)] for o in range(outer)]
+
+
+def _outer_groups(outer: int, inner: int) -> Sequence[Sequence[int]]:
+    """Strided groups — rank i of every node."""
+    return [[o * inner + i for o in range(outer)] for i in range(inner)]
+
+
+def hierarchical_all_to_all(x: jax.Array, axis_name: str, *,
+                            inner: int, outer: int) -> jax.Array:
+    """Two-stage AllToAll over axis of size ``outer·inner``.
+
+    Device rank r = o·inner + i.  Stage A exchanges over the destination
+    inner index within each node (fast fabric); after the transpose each
+    device holds, contiguously per destination node, everything its node
+    sends there; stage B crosses nodes with inner×-larger messages.
+    """
+    M = outer * inner
+    c = x.shape[1:]
+    assert x.shape[0] == M, (x.shape, M)
+    # [dest_o, dest_i] destination-major chunks
+    x = x.reshape(outer, inner, *c)
+    x = jnp.swapaxes(x, 0, 1)                      # [dest_i, dest_o]
+    # Stage A — intra-node: exchange the dest-inner dimension.
+    x = lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True,
+                       axis_index_groups=_inner_groups(outer, inner))
+    # now [src_i, dest_o]: everything MY NODE sends to (dest_o, my_i)
+    x = jnp.swapaxes(x, 0, 1)                      # [dest_o, src_i] — the
+    # layout transform: per-destination-node data is now contiguous.
+    # Stage B — inter-node: inner×-aggregated messages.
+    x = lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True,
+                       axis_index_groups=_outer_groups(outer, inner))
+    # now [src_o, src_i] — source-major, same convention as flat.
+    return x.reshape(M, *c)
+
+
+def all_to_all(x: jax.Array, axis_name: str, *, mode: str = "flat",
+               inner: int = 1, outer: Optional[int] = None) -> jax.Array:
+    """Mode-dispatching entry point used by the MoE layer."""
+    if mode == "flat" or inner <= 1:
+        return flat_all_to_all(x, axis_name)
+    assert mode == "hierarchical", mode
+    if outer is None:
+        outer = x.shape[0] // inner
+    if outer <= 1:
+        return flat_all_to_all(x, axis_name)
+    return hierarchical_all_to_all(x, axis_name, inner=inner, outer=outer)
+
+
+# ---------------------------------------------------------------------------
+# α–β (latency–bandwidth) cost model — used by benchmarks/ and the roofline.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One fabric level.  alpha: per-message latency (s); beta: per-byte
+    time (s/B) = 1/bandwidth."""
+    alpha: float
+    beta: float
+
+
+# TPU v5e defaults (per chip): ICI ~50 GB/s/link; DCN much slower.
+ICI = LinkSpec(alpha=1e-6, beta=1 / 50e9)
+DCN = LinkSpec(alpha=50e-6, beta=1 / 6.25e9)
+# Paper's commodity GPU cluster levels, for the Fig. 7 reproduction:
+# PCIe intra-node; 1 NIC (~100 Gb Ethernet/RoCE) per node.  The NIC α
+# includes NCCL's per-message rendezvous cost — the small-message
+# inefficiency HetuMoE attacks.
+PCIE = LinkSpec(alpha=5e-6, beta=1 / 12e9)
+ETH100 = LinkSpec(alpha=50e-6, beta=1 / 12.5e9)
+
+
+def cost_flat(bytes_per_device: float, N: int, G: int,
+              fast: LinkSpec, slow: LinkSpec) -> float:
+    """Flat AllToAll on N nodes × G GPUs, per-node NIC-centric.
+
+    Each GPU sends M-1 = N·G-1 messages of B/M bytes.  Intra-node
+    messages ride the fast fabric in parallel per GPU; the G·G·(N-1)
+    inter-node messages of ONE NODE all serialize through its single NIC
+    (the paper's Fig. 5 bottleneck): G² messages per node-pair.
+    """
+    M = N * G
+    msg = bytes_per_device / M
+    intra = (G - 1) * (fast.alpha + msg * fast.beta)
+    n_nic_msgs = G * G * (N - 1)                     # through one NIC
+    nic_bytes = G * (M - G) / M * bytes_per_device
+    inter = n_nic_msgs * slow.alpha + nic_bytes * slow.beta
+    return intra + inter
+
+
+def cost_hierarchical(bytes_per_device: float, N: int, G: int,
+                      fast: LinkSpec, slow: LinkSpec) -> float:
+    """Two-stage AllToAll: same NIC bytes, but G× fewer / G× larger
+    inter-node messages (paper: B/(GN) → BG/N message size).
+
+    Stage A: intra-node AllToAll, G-1 messages of B/G per GPU (fast).
+    Stage B: per node, G·(N-1) messages of B/N through the NIC.
+    """
+    a = (G - 1) * (fast.alpha + (bytes_per_device / G) * fast.beta)
+    n_nic_msgs = G * (N - 1)
+    nic_bytes = G * (N - 1) / N * bytes_per_device
+    b = n_nic_msgs * slow.alpha + nic_bytes * slow.beta
+    return a + b

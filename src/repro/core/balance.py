@@ -1,0 +1,47 @@
+"""Router auxiliary losses + load metrics (Switch/GShard style)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MoEConfig
+from repro.core.gating import GateOutput
+
+
+def load_balance_loss(gate: GateOutput) -> jax.Array:
+    """Switch Transformer aux loss: E · Σ_e f_e · P_e.
+
+    f_e — fraction of tokens whose FIRST choice is e (hard counts);
+    P_e — mean router probability of e (soft, differentiable).
+    Minimized (=1) by a uniform assignment.
+    """
+    E = gate.router_probs.shape[-1]
+    first = gate.expert_index[:, 0]
+    f = jnp.mean(jax.nn.one_hot(first, E, dtype=gate.router_probs.dtype), axis=0)
+    p = jnp.mean(gate.router_probs, axis=0)
+    return E * jnp.sum(f * p)
+
+
+def router_z_loss(gate: GateOutput) -> jax.Array:
+    """ST-MoE z-loss: mean (logsumexp logits)² — keeps router logits small."""
+    return jnp.mean(jax.nn.logsumexp(gate.logits, axis=-1) ** 2)
+
+
+def aux_losses(cfg: MoEConfig, gate: GateOutput
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Weighted aux-loss scalar + router metrics dict."""
+    E = gate.router_probs.shape[-1]
+    lb = load_balance_loss(gate)
+    zl = router_z_loss(gate)
+    loss = cfg.aux_loss_weight * lb + cfg.router_z_loss_weight * zl
+    counts = jnp.sum(
+        jax.nn.one_hot(gate.expert_index, E, dtype=jnp.float32), axis=(0, 1))
+    metrics = {
+        "load_balance_loss": lb,
+        "router_z_loss": zl,
+        "expert_load_max": jnp.max(counts) / jnp.maximum(jnp.sum(counts), 1.0),
+        "expert_load_min": jnp.min(counts) / jnp.maximum(jnp.sum(counts), 1.0),
+    }
+    return loss, metrics

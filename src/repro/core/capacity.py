@@ -1,0 +1,27 @@
+"""Expert-capacity computation (GShard/Switch semantics).
+
+Fixed per-expert capacity makes every MoE buffer static — mandatory for
+XLA/TPU, and exactly the contiguous layout the paper's layout-transform
+kernel produces.  Tokens beyond capacity are dropped (their combine
+weight is zeroed, so the residual path carries them through).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.config import MoEConfig
+from repro.core import gating
+
+
+def expert_capacity(cfg: MoEConfig, num_tokens: int, num_experts: int,
+                    *, align: int = 8) -> int:
+    """Per-expert token capacity for a group of ``num_tokens`` tokens.
+
+    capacity = ceil(k · S / E · capacity_factor), rounded up to ``align``
+    (sublane alignment for the (E, C, d) dispatch buffer; the d dimension
+    carries the 128-lane requirement).
+    """
+    k = gating.gate_k(cfg)
+    cap = math.ceil(num_tokens * k / num_experts * cfg.capacity_factor)
+    cap = max(align, math.ceil(cap / align) * align)
+    return min(cap, num_tokens * k)

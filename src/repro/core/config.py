@@ -1,0 +1,219 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything downstream (model zoo, MoE layer, launcher, dry-run) is driven
+by these frozen dataclasses.  One ``ModelConfig`` fully describes an
+architecture; ``src/repro/configs/<id>.py`` instantiates one per assigned
+architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Gating strategies supported (paper Fig. 2 — HetuMoE supports all of these).
+# ---------------------------------------------------------------------------
+GATE_STRATEGIES = (
+    "topk",            # Shazeer et al. 2017 — generic top-k
+    "switch",          # Fedus et al. 2021 — top-1
+    "gshard",          # Lepikhin et al. 2020 — top-2 (2nd expert sampled)
+    "ktop1",           # M6-T — k prototypes, top-1 within each
+    "sam",             # SAM — hierarchical: switch over groups, top-k inside
+    "base",            # BASE layer — balanced linear assignment
+    "hash",            # Hash layer — token-id hashing
+    "dense_to_sparse", # Nie et al. 2021 — gumbel-softmax annealed density
+)
+
+A2A_MODES = ("flat", "hierarchical")
+DISPATCH_MODES = ("sort", "dense")  # sort = HetuMoE layout-transform; dense = one-hot einsum baseline
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts layer configuration."""
+    num_experts: int
+    top_k: int = 1
+    gate: str = "switch"
+    capacity_factor: float = 1.25
+    d_ff_expert: Optional[int] = None      # expert hidden width (defaults to model d_ff)
+    num_shared_experts: int = 0            # always-on experts (Llama4-style)
+    num_prototypes: int = 1                # for ktop1 (M6)
+    num_groups: int = 1                    # for sam hierarchical routing
+    dispatch: str = "sort"                 # "sort" (paper) | "dense" (baseline)
+    a2a: str = "flat"                      # "flat" | "hierarchical"
+    a2a_inner: int = 4                     # inner group size for hierarchical a2a
+    aux_loss_weight: float = 0.01
+    router_z_loss_weight: float = 0.0
+    router_dtype: str = "float32"
+    gumbel_temperature: float = 1.0        # for dense_to_sparse
+    use_pallas_gate: bool = False          # route through kernels/topk_gate
+
+    def __post_init__(self):
+        assert self.gate in GATE_STRATEGIES, self.gate
+        assert self.a2a in A2A_MODES, self.a2a
+        assert self.dispatch in DISPATCH_MODES, self.dispatch
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    window: Optional[int] = None            # sliding-window size (SWA layers)
+    attn_softcap: Optional[float] = None    # gemma2-style attn logit softcap
+    causal: bool = True
+    qk_norm: bool = False
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block configuration."""
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    chunk_size: int = 128
+    conv_width: int = 4
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV-6 'Finch' time-mix configuration."""
+    head_dim: int = 64
+    chunk_size: int = 128
+    decay_lora: int = 64       # low-rank dim for data-dependent decay
+    mix_lora: int = 32         # low-rank dim for token-shift interpolation
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    # Per-layer block kinds, cycled:  num_layers % len(block_pattern) == 0.
+    #   attn        full (or windowed, per AttentionConfig.window) attention + MLP
+    #   local       sliding-window attention + MLP (gemma2 alternation)
+    #   global      full attention + MLP
+    #   moe         attention + MoE FFN
+    #   dense       attention + dense FFN (used in moe interleave)
+    #   mamba       Mamba-2 block
+    #   mamba_sa    Mamba-2 block followed by the *shared* attention block (zamba2)
+    #   rwkv        RWKV-6 time-mix + channel-mix
+    block_pattern: Tuple[str, ...] = ("attn",)
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    encoder_only: bool = False
+    frontend: Optional[str] = None    # None | "audio" | "vision"
+    act: str = "swiglu"               # swiglu | geglu | gelu
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-6
+    final_softcap: Optional[float] = None   # gemma2 final-logit softcap
+    local_window: int = 4096          # window used by "local" blocks
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # embedding scale (gemma-style sqrt(d_model) multiplier)
+    scale_embeddings: bool = False
+    source: str = ""                  # citation for the config
+
+    def __post_init__(self):
+        assert self.num_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"pattern period {len(self.block_pattern)}")
+        kinds = set(self.block_pattern)
+        if kinds & {"attn", "local", "global", "moe", "dense", "mamba_sa"}:
+            assert self.attention is not None, f"{self.name}: needs AttentionConfig"
+        if "moe" in kinds:
+            assert self.moe is not None, f"{self.name}: needs MoEConfig"
+        if kinds & {"mamba", "mamba_sa"}:
+            assert self.ssm is not None, f"{self.name}: needs SSMConfig"
+        if "rwkv" in kinds:
+            assert self.rwkv is not None, f"{self.name}: needs RWKVConfig"
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        a = self.attention
+        if a is None:
+            return 0
+        return a.head_dim if a.head_dim is not None else self.d_model // a.num_heads
+
+    @property
+    def num_super_blocks(self) -> int:
+        return self.num_layers // len(self.block_pattern)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if every block is O(seq) at decode with bounded state."""
+        for kind in self.block_pattern:
+            if kind in ("mamba", "rwkv", "mamba_sa"):
+                continue  # mamba_sa shared-attn handled with bounded window at decode
+            if kind == "local":
+                continue
+            if kind in ("attn",) and self.attention.window is not None:
+                continue
+            if kind == "global" and self.local_window is not None:
+                # gemma2 global layers are capped to a window in long-context
+                # serving mode (documented variant).
+                return False
+            return False
+        return True
+
+    @property
+    def has_decode(self) -> bool:
+        return not self.encoder_only
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    microbatches: int = 1              # gradient accumulation
+    remat: str = "none"                # none | block | full
+    optimizer_state_dtype: str = "float32"   # "bfloat16" for the giant configs
+    schedule: str = "cosine"
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+
+    @property
+    def num_devices(self) -> int:
+        return self.data * self.model * self.pods

@@ -1,0 +1,257 @@
+"""Gating strategies — the breadth axis of HetuMoE (paper Fig. 2).
+
+Every strategy maps router logits ``(S, E)`` to a :class:`GateOutput`
+with STATIC shapes ``(S, K)`` — a hard requirement on TPU/XLA.  The
+strategies (paper §3.1):
+
+=================  ==========================================================
+``topk``           Shazeer et al. 2017 — ``g = softmax(TopK(x·W, K))``
+``switch``         Fedus et al. 2021 — Top-1 of the full softmax
+``gshard``         Lepikhin et al. 2020 — Top-2; 2nd expert stochastically
+                   sampled ∝ prob (deterministic 2nd argmax if no rng)
+``ktop1``          M6-T — experts split into ``num_prototypes`` prototypes,
+                   Top-1 within each, outputs summed
+``sam``            SAM — hierarchical: Switch router over ``num_groups``
+                   device-groups, Mixture Top-k inside the chosen group
+``base``           BASE layer — balanced linear assignment.  We solve the
+                   relaxed assignment with Sinkhorn iterations (the
+                   TPU-friendly formulation used by S-BASE; the exact
+                   auction algorithm of the paper is host-sequential)
+``hash``           Hash layer — token-id bucket hashing, parameter-free
+``dense_to_sparse``Nie et al. 2021 — Gumbel-softmax routing annealed by a
+                   temperature schedule from dense to sparse
+=================  ==========================================================
+
+The gate runs in ``router_dtype`` (default f32) regardless of the model
+compute dtype — router numerics dominate MoE training stability.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MoEConfig
+
+
+class GateOutput(NamedTuple):
+    """Routing decision for a group of S tokens (static shapes).
+
+    ``expert_index``    (S, K) int32  — target expert per assignment slot
+    ``combine_weights`` (S, K) f32    — weight used in the output combine
+    ``router_probs``    (S, E) f32    — full distribution (aux losses)
+    ``logits``          (S, E) f32    — raw router logits (z-loss)
+    """
+    expert_index: jax.Array
+    combine_weights: jax.Array
+    router_probs: jax.Array
+    logits: jax.Array
+
+    @property
+    def k(self) -> int:
+        return self.expert_index.shape[-1]
+
+
+def _topk(logits: jax.Array, k: int):
+    """Top-k values+indices.  For the k∈{1,2} fast path use iterative max
+    (O(k·E), what the Pallas kernel implements) instead of XLA sort."""
+    if k == 1:
+        idx = jnp.argmax(logits, axis=-1, keepdims=True)
+        val = jnp.take_along_axis(logits, idx, axis=-1)
+        return val, idx.astype(jnp.int32)
+    if k == 2:
+        i1 = jnp.argmax(logits, axis=-1, keepdims=True)
+        v1 = jnp.take_along_axis(logits, i1, axis=-1)
+        masked = jnp.where(
+            jax.nn.one_hot(i1[..., 0], logits.shape[-1], dtype=bool),
+            -jnp.inf, logits)
+        i2 = jnp.argmax(masked, axis=-1, keepdims=True)
+        v2 = jnp.take_along_axis(masked, i2, axis=-1)
+        return (jnp.concatenate([v1, v2], -1),
+                jnp.concatenate([i1, i2], -1).astype(jnp.int32))
+    val, idx = jax.lax.top_k(logits, k)
+    return val, idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# individual strategies
+# ---------------------------------------------------------------------------
+
+def _gate_topk(cfg: MoEConfig, logits, rng, token_ids):
+    """Paper Eq. 1: softmax over the K selected logits."""
+    val, idx = _topk(logits, cfg.top_k)
+    weights = jax.nn.softmax(val, axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return GateOutput(idx, weights, probs, logits)
+
+
+def _gate_switch(cfg: MoEConfig, logits, rng, token_ids):
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(probs, axis=-1, keepdims=True).astype(jnp.int32)
+    weights = jnp.take_along_axis(probs, idx, axis=-1)
+    return GateOutput(idx, weights, probs, logits)
+
+
+def _gate_gshard(cfg: MoEConfig, logits, rng, token_ids):
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = logits.shape[-1]
+    i1 = jnp.argmax(probs, axis=-1)
+    g1 = jnp.take_along_axis(probs, i1[:, None], axis=-1)[:, 0]
+    masked = jnp.where(jax.nn.one_hot(i1, E, dtype=bool), 0.0, probs)
+    if rng is not None:
+        # GShard samples the 2nd expert proportionally to its prob.
+        i2 = jax.random.categorical(rng, jnp.log(masked + 1e-9), axis=-1)
+    else:
+        i2 = jnp.argmax(masked, axis=-1)
+    g2 = jnp.take_along_axis(masked, i2[:, None], axis=-1)[:, 0]
+    denom = g1 + g2 + 1e-9
+    idx = jnp.stack([i1, i2], axis=-1).astype(jnp.int32)
+    weights = jnp.stack([g1 / denom, g2 / denom], axis=-1)
+    return GateOutput(idx, weights, probs, logits)
+
+
+def _gate_ktop1(cfg: MoEConfig, logits, rng, token_ids):
+    """M6-T: E = P·(E/P) prototypes; Top-1 inside each prototype, summed."""
+    S, E = logits.shape
+    P = cfg.num_prototypes
+    assert E % P == 0, f"ktop1: {E} experts not divisible by {P} prototypes"
+    per = E // P
+    lp = logits.reshape(S, P, per)
+    probs_p = jax.nn.softmax(lp, axis=-1)            # softmax inside prototype
+    local = jnp.argmax(lp, axis=-1)                  # (S, P)
+    w = jnp.take_along_axis(probs_p, local[..., None], axis=-1)[..., 0]
+    idx = (local + jnp.arange(P, dtype=local.dtype)[None, :] * per)
+    probs = probs_p.reshape(S, E) / P                # proper distribution
+    return GateOutput(idx.astype(jnp.int32), w, probs, logits)
+
+
+def _gate_sam(cfg: MoEConfig, logits, rng, token_ids):
+    """SAM (H Top-k): Switch router picks ONE group (= one device's experts),
+    Mixture router picks Top-k inside it — remote activations avoided."""
+    S, E = logits.shape
+    G = cfg.num_groups
+    assert E % G == 0, f"sam: {E} experts not divisible by {G} groups"
+    per = E // G
+    k = min(cfg.top_k, per)
+    lg = logits.reshape(S, G, per)
+    group_score = jax.nn.logsumexp(lg, axis=-1)          # (S, G) switch router
+    gsel = jnp.argmax(group_score, axis=-1)              # (S,)
+    chosen = jnp.take_along_axis(lg, gsel[:, None, None], axis=1)[:, 0]  # (S, per)
+    val, local = _topk(chosen, k)
+    weights = jax.nn.softmax(val, axis=-1)
+    idx = (local + (gsel[:, None] * per).astype(jnp.int32))
+    group_probs = jax.nn.softmax(group_score, axis=-1)
+    probs = (jax.nn.softmax(lg, axis=-1) * group_probs[..., None]).reshape(S, E)
+    return GateOutput(idx.astype(jnp.int32), weights, probs, logits)
+
+
+def _gate_base(cfg: MoEConfig, logits, rng, token_ids,
+               n_iters: int = 8, eps: float = 1.0):
+    """BASE layer via Sinkhorn: maximize Σ x_i·w_{a_i} s.t. balanced loads
+    (paper Eq. 2).  Entropic relaxation, ``n_iters`` normalization sweeps in
+    log space, then per-token argmax of the transport plan."""
+    S, E = logits.shape
+    log_pi = logits / eps
+    for _ in range(n_iters):
+        log_pi = log_pi - jax.nn.logsumexp(log_pi, axis=1, keepdims=True)
+        log_pi = log_pi - jax.nn.logsumexp(log_pi, axis=0, keepdims=True) \
+            + jnp.log(jnp.asarray(S / E, log_pi.dtype))
+    idx = jnp.argmax(log_pi, axis=-1, keepdims=True).astype(jnp.int32)
+    # BASE combines with σ(score) of the assigned expert (no softmax,
+    # no auxiliary loss — balance is structural).
+    score = jnp.take_along_axis(logits, idx, axis=-1)
+    weights = jax.nn.sigmoid(score)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return GateOutput(idx, weights, probs, logits)
+
+
+def _gate_hash(cfg: MoEConfig, logits, rng, token_ids):
+    """Hash layer: parameter-free token-id bucketing (Roller et al.)."""
+    S, E = logits.shape
+    if token_ids is None:
+        raise ValueError("hash gate requires token_ids")
+    h = token_ids.astype(jnp.uint32)
+    # Knuth multiplicative hash — a fixed 'random hash' of the vocabulary.
+    h = (h * jnp.uint32(2654435761)) ^ (h >> 16)
+    idx = (h % jnp.uint32(E)).astype(jnp.int32)[:, None]
+    weights = jnp.ones((S, 1), dtype=logits.dtype)
+    probs = jax.nn.one_hot(idx[:, 0], E, dtype=logits.dtype)
+    return GateOutput(idx, weights, probs, logits)
+
+
+def _gate_dense_to_sparse(cfg: MoEConfig, logits, rng, token_ids):
+    """Dense-to-Sparse: Gumbel-softmax with annealed temperature.  At high T
+    the distribution is near-uniform (dense routing across the K slots); as
+    T → 0 it collapses onto the argmax (sparse).  K = cfg.top_k slots."""
+    T = jnp.asarray(cfg.gumbel_temperature, logits.dtype)
+    if rng is not None:
+        g = -jnp.log(-jnp.log(
+            jax.random.uniform(rng, logits.shape, logits.dtype, 1e-6, 1.0)))
+        noisy = (logits + g) / T
+    else:
+        noisy = logits / T
+    y = jax.nn.softmax(noisy, axis=-1)
+    val, idx = _topk(y, cfg.top_k)
+    # weights are the (unrenormalized) gumbel-softmax probabilities: the
+    # annealing shifts mass onto slot 0 as T decreases.
+    return GateOutput(idx, val, y, logits)
+
+
+_GATES = {
+    "topk": _gate_topk,
+    "switch": _gate_switch,
+    "gshard": _gate_gshard,
+    "ktop1": _gate_ktop1,
+    "sam": _gate_sam,
+    "base": _gate_base,
+    "hash": _gate_hash,
+    "dense_to_sparse": _gate_dense_to_sparse,
+}
+
+
+def gate_k(cfg: MoEConfig) -> int:
+    """Static number of assignment slots per token for a strategy."""
+    if cfg.gate in ("switch", "base", "hash"):
+        return 1
+    if cfg.gate == "gshard":
+        return 2
+    if cfg.gate == "ktop1":
+        return cfg.num_prototypes
+    return cfg.top_k
+
+
+def _route_pallas(cfg: MoEConfig, logits: jax.Array) -> GateOutput:
+    """Fast path for topk/switch: the fused Pallas kernel does the top-k
+    SELECTION (integer indices — inherently non-differentiable); the
+    combine weights are then recomputed from the indices as differentiable
+    functions of the logits, so the router still trains."""
+    from repro.kernels import ops as kops  # lazy: kernels are optional
+    k = gate_k(cfg)
+    _, idx, _, _ = kops.fused_topk(jax.lax.stop_gradient(logits), k)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if cfg.gate == "topk":
+        vals = jnp.take_along_axis(logits, idx, axis=-1)
+        weights = jax.nn.softmax(vals, axis=-1)
+    else:  # switch
+        weights = jnp.take_along_axis(probs, idx, axis=-1)
+    return GateOutput(idx, weights, probs, logits)
+
+
+def route(cfg: MoEConfig, logits: jax.Array, *,
+          rng: Optional[jax.Array] = None,
+          token_ids: Optional[jax.Array] = None) -> GateOutput:
+    """Dispatch a (S, E) logits tensor through the configured strategy."""
+    logits = logits.astype(jnp.float32)
+    if cfg.use_pallas_gate and cfg.gate in ("topk", "switch"):
+        return _route_pallas(cfg, logits)
+    out = _GATES[cfg.gate](cfg, logits, rng, token_ids)
+    assert out.expert_index.shape[-1] == gate_k(cfg), (
+        cfg.gate, out.expert_index.shape, gate_k(cfg))
+    return out
+
+
+def router_logits(cfg: MoEConfig, x: jax.Array, gate_w: jax.Array) -> jax.Array:
+    """x·W in router_dtype (paper computes the gate in f32)."""
+    dt = jnp.dtype(cfg.router_dtype)
+    return x.astype(dt) @ gate_w.astype(dt)

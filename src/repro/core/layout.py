@@ -1,0 +1,134 @@
+"""Data layout transform (paper §3.2, Fig. 4) — and its inverse.
+
+After the gate decides token→expert, tokens bound for the same expert
+must land in physically-contiguous memory before the AllToAll.  Two
+interchangeable implementations produce bit-identical ``(E·C, d)``
+buffers under the same priority rule (position-in-batch, slot-major):
+
+``sort``    HetuMoE's approach — a stable sort over expert ids yields the
+            position-within-expert, then a scatter packs the buffer.  On
+            TPU the scatter is the Pallas ``layout_transform`` kernel
+            (kernels/layout_transform.py); this module is the pure-jnp
+            path the kernel is validated against.
+``dense``   GShard/DeepSpeed baseline — position via cumsum of one-hots
+            and a (S·K, E·C) one-hot einsum.  O(S·E·C) FLOPs vs the sort
+            path's O(S·K·log(S·K)) + O(S·K·d) — the gap the paper's
+            layout kernel exploits.
+
+Dropped tokens (position ≥ capacity) get ``slot = -1`` and weight 0: the
+residual connection carries them unchanged (Switch semantics).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gating import GateOutput
+
+
+class DispatchPlan(NamedTuple):
+    """Static-shape routing plan for S tokens × K slots.
+
+    ``slot``   (S, K) int32 — row in the (E·C, d) dispatch buffer, -1 dropped
+    ``weight`` (S, K) f32   — combine weight, zeroed for dropped slots
+    """
+    slot: jax.Array
+    weight: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# plan construction — position-within-expert under capacity
+# ---------------------------------------------------------------------------
+
+def plan_sort(gate: GateOutput, num_experts: int, capacity: int) -> DispatchPlan:
+    """HetuMoE path: stable argsort over expert ids.
+
+    The stable sort keyed on expert id orders each expert's tokens by
+    flattened (slot, token) index — slot-major priority (GShard/Switch
+    semantics: every token's 1st choice outranks any 2nd choice) — so the
+    first C stay, the rest drop.  Identical to :func:`plan_cumsum`.
+    """
+    S, K = gate.expert_index.shape
+    flat_e = gate.expert_index.T.reshape(K * S)        # k-major flatten
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(flat_e), flat_e, num_segments=num_experts)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(K * S, dtype=flat_e.dtype) - starts[sorted_e]
+    pos = jnp.zeros_like(flat_e).at[order].set(pos_sorted)
+    keep = pos < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos, -1).reshape(K, S).T
+    weight = jnp.where((pos < capacity).reshape(K, S).T,
+                       gate.combine_weights, 0.0)
+    return DispatchPlan(slot.astype(jnp.int32), weight)
+
+
+def plan_cumsum(gate: GateOutput, num_experts: int, capacity: int) -> DispatchPlan:
+    """GShard baseline path: position via running one-hot cumsums,
+    slot k accounting for all tokens of slots < k.  Identical output to
+    :func:`plan_sort` (asserted in tests)."""
+    S, K = gate.expert_index.shape
+    oh = jax.nn.one_hot(gate.expert_index, num_experts, dtype=jnp.int32)  # (S,K,E)
+    pos = jnp.zeros((S, K), jnp.int32)
+    running = jnp.zeros((num_experts,), jnp.int32)
+    for k in range(K):  # K is tiny (≤8) and static — unrolled
+        csum = jnp.cumsum(oh[:, k, :], axis=0) - oh[:, k, :]      # excl. cumsum
+        pos = pos.at[:, k].set(
+            jnp.sum(oh[:, k, :] * (csum + running[None, :]), axis=-1))
+        running = running + jnp.sum(oh[:, k, :], axis=0)
+    keep = pos < capacity
+    flat_e = gate.expert_index
+    slot = jnp.where(keep, flat_e * capacity + pos, -1)
+    weight = jnp.where(keep, gate.combine_weights, 0.0)
+    return DispatchPlan(slot.astype(jnp.int32), weight)
+
+
+# ---------------------------------------------------------------------------
+# dispatch / combine execution
+# ---------------------------------------------------------------------------
+
+def dispatch_scatter(tokens: jax.Array, plan: DispatchPlan,
+                     num_experts: int, capacity: int) -> jax.Array:
+    """(S, d) → (E·C, d) via scatter (paper's layout-transform kernel)."""
+    S, K = plan.slot.shape
+    keep = plan.slot >= 0
+    safe = jnp.where(keep, plan.slot, 0).reshape(S * K)
+    src = jnp.where(keep.reshape(S * K, 1),
+                    jnp.repeat(tokens, K, axis=0), 0).astype(tokens.dtype)
+    buf = jnp.zeros((num_experts * capacity, tokens.shape[-1]), tokens.dtype)
+    return buf.at[safe].add(src, mode="drop")
+
+
+def combine_gather(expert_out: jax.Array, plan: DispatchPlan) -> jax.Array:
+    """(E·C, d) → (S, d): inverse layout transform + weighted combine."""
+    S, K = plan.slot.shape
+    keep = plan.slot >= 0
+    safe = jnp.where(keep, plan.slot, 0)
+    gathered = expert_out[safe.reshape(S * K)].reshape(S, K, -1)
+    w = (plan.weight * keep).astype(expert_out.dtype)
+    return jnp.einsum("skd,sk->sd", gathered, w)
+
+
+def dispatch_dense(tokens: jax.Array, plan: DispatchPlan,
+                   num_experts: int, capacity: int) -> jax.Array:
+    """Dense one-hot einsum dispatch — the DeepSpeed/GShard baseline the
+    paper's Fig. 4 compares against.  O(S·E·C·d)."""
+    S, K = plan.slot.shape
+    keep = plan.slot >= 0
+    mask = jax.nn.one_hot(jnp.where(keep, plan.slot, -1),
+                          num_experts * capacity, dtype=tokens.dtype)  # (S,K,EC)
+    return jnp.einsum("skc,sd->cd", mask, tokens)
+
+
+def combine_dense(expert_out: jax.Array, plan: DispatchPlan,
+                  num_experts: int, capacity: int) -> jax.Array:
+    """Dense combine: (S,K,E·C) weighted one-hot × (E·C, d)."""
+    keep = plan.slot >= 0
+    mask = jax.nn.one_hot(jnp.where(keep, plan.slot, -1),
+                          num_experts * capacity, dtype=expert_out.dtype)
+    w = (plan.weight * keep).astype(expert_out.dtype)
+    return jnp.einsum("skc,sk,cd->sd", mask, w, expert_out)

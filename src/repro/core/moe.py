@@ -1,0 +1,252 @@
+"""The HetuMoE layer — paper Algorithm 1, expert-parallel over a mesh axis.
+
+Per-device flow (inside ``shard_map``):
+
+    1. gate            route(cfg, x·W)                     [core/gating]
+    2. layout xform    plan + dispatch → (E·C, d)           [core/layout]
+    3. AllToAll        flat | hierarchical over ``model``   [core/alltoall]
+    4. experts         vmapped FFN over local experts
+    5. AllToAll        return path (same mode)
+    6. reverse xform   gather + weighted combine            [core/layout]
+
+Tokens are sharded over EVERY mesh axis (the token axis is the product
+batch·seq flattened): each of the D·M devices routes its own T/(D·M)
+tokens.  Experts shard over ``model`` and replicate over ``data``/``pod``
+(classic EP×DP); the AllToAll therefore runs inside each data-group's
+row of model-ranks, and expert-weight gradients all-reduce over
+``data``/``pod`` automatically through the ``shard_map`` transpose.
+
+Token counts that don't divide the device count (decode batches) are
+padded; padded tokens are routed to a virtual expert E (dropped by the
+plan) so they consume no real capacity.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import alltoall, balance, capacity, gating, layout
+from repro.core.config import MoEConfig
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_moe_params(rng: jax.Array, cfg: MoEConfig, d_model: int, d_ff: int,
+                    num_experts: int, *, act: str = "swiglu",
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    d_ff = cfg.d_ff_expert or d_ff
+    k_gate, k_up, k_gt, k_out = jax.random.split(rng, 4)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        # router always in f32 — numerics matter more than bytes here
+        "gate_w": (jax.random.normal(k_gate, (d_model, num_experts), jnp.float32)
+                   * scale_in),
+        # up / gate kept SEPARATE (not fused 2f) so the f dim shards
+        # cleanly in expert-TP mode (§Perf, llama4 decode hillclimb)
+        "w_up": (jax.random.normal(k_up, (num_experts, d_model, d_ff), jnp.float32)
+                 * scale_in).astype(dtype),
+        "w_out": (jax.random.normal(k_out, (num_experts, d_ff, d_model), jnp.float32)
+                  * scale_out).astype(dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(
+            k_gt, (num_experts, d_model, d_ff), jnp.float32)
+            * scale_in).astype(dtype)
+    return p
+
+
+def expert_ffn(params: Dict[str, jax.Array], x: jax.Array,
+               act: str) -> jax.Array:
+    """(E_local, T, d) × expert weights → (E_local, T, d)."""
+    h = jnp.einsum("etd,edf->etf", x, params["w_up"])
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("etd,edf->etf", x, params["w_gate"])
+        h = h * (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return jnp.einsum("etf,efd->etd", h, params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# the per-device MoE block (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
+                    *, num_experts: int, act: str,
+                    model_axis: Optional[str] = None, model_size: int = 1,
+                    pmean_axes: Tuple[str, ...] = (),
+                    rng: Optional[jax.Array] = None,
+                    token_ids: Optional[jax.Array] = None,
+                    valid: Optional[jax.Array] = None,
+                    expert_tp_axis: Optional[str] = None,
+                    ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """x: (T_local, d) → (y, aux_loss, metrics).  ``params`` hold LOCAL
+    expert shards: w_up/w_gate/w_out have leading dim E_local."""
+    T, d = x.shape
+    E = num_experts
+    E_local = E // model_size
+    assert params["w_up"].shape[0] == E_local, (params["w_up"].shape, E_local)
+
+    # -- 1. gate ----------------------------------------------------------
+    logits = gating.router_logits(cfg, x, params["gate_w"])
+    gate = gating.route(cfg, logits, rng=rng, token_ids=token_ids)
+    if valid is not None:
+        # padded tokens → virtual expert E: dropped by the plan, zero weight
+        gate = gate._replace(
+            expert_index=jnp.where(valid[:, None], gate.expert_index, E),
+            combine_weights=jnp.where(valid[:, None], gate.combine_weights, 0.0))
+    aux, metrics = balance.aux_losses(cfg, gate)
+
+    # -- 2. layout transform ------------------------------------------------
+    C = capacity.expert_capacity(cfg, T, E)
+    if cfg.dispatch == "sort":
+        plan = layout.plan_sort(gate, E + 1, C)       # +1 = virtual drop bucket
+        plan = plan._replace(slot=jnp.where(plan.slot >= E * C, -1, plan.slot))
+        buf = layout.dispatch_scatter(x, plan, E, C)
+        if cfg.use_pallas_gate:
+            # the Pallas layout kernel replaces the jnp scatter on TPU;
+            # interpret-mode equivalence is asserted in tests
+            from repro.kernels import ops as kops
+            buf = kops.layout_dispatch(x, plan.slot, E, C)
+    else:
+        plan = layout.plan_cumsum(gate, E + 1, C)
+        plan = plan._replace(slot=jnp.where(plan.slot >= E * C, -1, plan.slot))
+        buf = layout.dispatch_dense(x, plan, E, C)
+
+    # -- 3. AllToAll (dispatch) ---------------------------------------------
+    if model_size > 1:
+        buf = buf.reshape(model_size, E_local * C, d)
+        buf = alltoall.all_to_all(buf, model_axis, mode=cfg.a2a,
+                                  inner=cfg.a2a_inner)
+        # (M, E_local·C, d) source-major → (E_local, M·C, d)
+        buf = (buf.reshape(model_size, E_local, C, d)
+               .transpose(1, 0, 2, 3).reshape(E_local, model_size * C, d))
+    else:
+        buf = buf.reshape(E_local, C, d)
+
+    # -- 4. experts -----------------------------------------------------------
+    if expert_tp_axis is not None:
+        # §Perf (llama4/dbrx decode hillclimb): expert TENSOR parallelism
+        # over the data axis — weights stay sharded on their f dim; the
+        # (tiny, decode-sized) token buffers are gathered across data,
+        # every data-rank computes its f-slice of every local expert, and
+        # a reduce-scatter returns each rank's own tokens.  Replaces the
+        # per-layer multi-GB ZeRO-3 weight gather with MB-scale token
+        # collectives.
+        buf = lax.all_gather(buf, expert_tp_axis, axis=1, tiled=True)
+        h = expert_ffn(params, buf.astype(params["w_up"].dtype), act)
+        h = lax.psum_scatter(h, expert_tp_axis, scatter_dimension=1,
+                             tiled=True)
+    else:
+        h = expert_ffn(params, buf.astype(params["w_up"].dtype), act)
+
+    # -- 5. AllToAll (return) -------------------------------------------------
+    if model_size > 1:
+        h = (h.reshape(E_local, model_size, C, d)
+             .transpose(1, 0, 2, 3).reshape(model_size, E_local * C, d))
+        h = alltoall.all_to_all(h, model_axis, mode=cfg.a2a, inner=cfg.a2a_inner)
+        h = h.reshape(E * C, d)
+    else:
+        h = h.reshape(E * C, d)
+
+    # -- 6. reverse layout transform + combine --------------------------------
+    if cfg.dispatch == "sort":
+        y = layout.combine_gather(h, plan)
+    else:
+        y = layout.combine_dense(h, plan, E, C)
+
+    if pmean_axes:
+        aux = lax.pmean(aux, pmean_axes)
+        metrics = {k: lax.pmean(v, pmean_axes) for k, v in metrics.items()}
+    return y.astype(x.dtype), aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrapper — the public MoE layer
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, mult: int, axis: int = 0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
+                      params: Dict[str, jax.Array], x: jax.Array, *,
+                      num_experts: int, act: str = "swiglu",
+                      model_axis: str = "model",
+                      rng: Optional[jax.Array] = None,
+                      token_ids: Optional[jax.Array] = None,
+                      expert_tp_axis: Optional[str] = None,
+                      ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Apply the MoE layer to ``x: (..., d)`` under ``mesh``.
+
+    Leading dims are flattened into one token axis, sharded over EVERY
+    mesh axis; expert weights shard over ``model_axis``.
+    """
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    toks = x.reshape(-1, d)
+    axis_names = tuple(mesh.axis_names)
+    n_dev = mesh.devices.size
+    model_size = mesh.shape[model_axis]
+
+    toks, n_real = _pad_to(toks, n_dev)
+    valid = (jnp.arange(toks.shape[0]) < n_real)
+    if token_ids is not None:
+        tid, _ = _pad_to(token_ids.reshape(-1), n_dev)
+    else:
+        tid = jnp.zeros((toks.shape[0],), jnp.int32)
+
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+
+    # §Perf H2 (dbrx train hillclimb): gather expert weights in the
+    # COMPUTE dtype.  The cast is outside shard_map, so the ZeRO-3
+    # all-gather XLA inserts at the shard_map boundary moves bf16, not
+    # f32 — halving the largest FSDP collective and its HBM transient.
+    params = {k: (v.astype(x.dtype) if k != "gate_w" else v)
+              for k, v in params.items()}
+
+    tok_spec = P(axis_names)
+    tp = expert_tp_axis if expert_tp_axis in axis_names else None
+    param_specs = {"gate_w": P(None, None),
+                   "w_up": P(model_axis, None, tp),
+                   "w_out": P(model_axis, tp, None)}
+    if "w_gate" in params:
+        param_specs["w_gate"] = P(model_axis, None, tp)
+
+    def local_fn(params, toks, valid, tid, rng):
+        idx = lax.axis_index(axis_names)
+        rng = jax.random.fold_in(rng, idx)
+        return moe_block_local(
+            cfg, params, toks, num_experts=num_experts, act=act,
+            model_axis=model_axis, model_size=model_size,
+            pmean_axes=axis_names, rng=rng,
+            token_ids=tid, valid=valid, expert_tp_axis=tp)
+
+    y, aux, metrics = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(param_specs, tok_spec, tok_spec, tok_spec, P()),
+        out_specs=(tok_spec, P(), {k: P() for k in
+                                   ("load_balance_loss", "router_z_loss",
+                                    "expert_load_max", "expert_load_min")}),
+        check_vma=False,
+    )(params, toks, valid, tid, rng)
+
+    y = y[:n_real].reshape(*lead, d)
+    return y, aux, metrics

@@ -1,0 +1,79 @@
+"""Layout-transform kernel (paper §3.2 "Layout Transform Optimization", Fig. 4).
+
+HetuMoE's CUDA kernel packs tokens bound for the same expert into
+contiguous memory with a warp-per-token gather.  TPU adaptation
+(DESIGN.md §2): a scalar-prefetch Pallas gather — the row-index vector is
+prefetched into SMEM and drives the input ``BlockSpec`` index_map, so each
+grid step DMAs exactly the (1, d) row it needs from HBM into VMEM.  This
+is the TPU-idiomatic indirection primitive (the same pattern as
+sparse-dense matmul gathers); XLA's alternative lowers scatter/gather to
+serialized HLO loops.
+
+Both directions use ONE kernel:
+  dispatch  out[r] = tokens[inv[r]]   (inv from the plan; -1 → zeros)
+  combine   out[s·K+j] = buffer[slot[s,j]]  (then weighted-sum in jnp)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_rows_kernel(idx_ref, src_ref, out_ref):
+    # src_ref is the (block, d) slab selected by the index_map below;
+    # rows with idx < 0 are zeroed (dropped slots).
+    i = pl.program_id(0)
+    valid = idx_ref[i] >= 0
+    out_ref[...] = jnp.where(valid, src_ref[...], 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def gather_rows(src: jax.Array, idx: jax.Array, interpret: bool = True):
+    """out[i] = src[idx[i]] (0 where idx[i] < 0).  src (N, d), idx (M,).
+
+    Differentiable: the VJP is the inverse scatter-add (on TPU that is the
+    same layout-transform run in the opposite direction; indices in a
+    dispatch/combine plan are unique so no real collisions occur).
+    """
+    return _gather_rows_fwd(src, idx, interpret)[0]
+
+
+def _gather_rows_fwd(src, idx, interpret):
+    # the (N, 0) token carries src's row count + dtype into the bwd pass
+    # (shapes/dtypes are not valid residual leaves themselves)
+    token = jnp.zeros((src.shape[0], 0), src.dtype)
+    return _gather_rows_impl(src, idx, interpret=interpret), (idx, token)
+
+
+def _gather_rows_bwd(interpret, res, g):
+    idx, token = res
+    n = token.shape[0]
+    safe = jnp.where(idx >= 0, idx, n)
+    dsrc = jnp.zeros((n, g.shape[1]), g.dtype).at[safe].add(
+        jnp.where((idx >= 0)[:, None], g, 0), mode="drop")
+    return dsrc.astype(token.dtype), None
+
+
+gather_rows.defvjp(_gather_rows_fwd, _gather_rows_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gather_rows_impl(src: jax.Array, idx: jax.Array, *, interpret: bool = True):
+    M, = idx.shape
+    N, d = src.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, idx_ref: (jnp.maximum(idx_ref[i], 0), 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, d), src.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), src)

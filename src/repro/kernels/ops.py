@@ -1,0 +1,55 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``INTERPRET`` is True off-TPU: the kernel bodies execute in Python on CPU
+(the container's validation mode); on a real TPU the same code lowers to
+Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import layout_transform, topk_gate
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def fused_topk(logits: jax.Array, k: int):
+    """(vals, idx, rowmax, sumexp) — see kernels/topk_gate.py."""
+    return topk_gate.fused_topk_gate(logits, k, interpret=INTERPRET)
+
+
+def topk_softmax_weights(logits: jax.Array, k: int):
+    """Top-k indices + their softmax(logits) probabilities + full probs,
+    all derived from the fused kernel's single pass."""
+    vals, idx, rowmax, sumexp = fused_topk(logits, k)
+    weights = jnp.exp(vals - rowmax) / sumexp
+    probs = jnp.exp(logits.astype(jnp.float32) - rowmax) / sumexp
+    return idx, weights, probs
+
+
+def layout_dispatch(tokens: jax.Array, slot: jax.Array,
+                    num_experts: int, capacity: int) -> jax.Array:
+    """(S, d), slot (S, K) → (E·C, d) contiguous-per-expert buffer.
+
+    The scatter is re-expressed as a gather: invert ``slot`` into a row
+    map ``inv (E·C,)`` (cheap jnp scatter of int32 indices), then the
+    Pallas kernel moves the d-wide rows — the bandwidth-heavy part.
+    """
+    S, K = slot.shape
+    flat = slot.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+    inv = jnp.full((num_experts * capacity,), -1, jnp.int32)
+    inv = inv.at[jnp.where(flat >= 0, flat, num_experts * capacity)].set(
+        tok_idx, mode="drop")
+    return layout_transform.gather_rows(tokens, inv, INTERPRET)
+
+
+def layout_combine(buffer: jax.Array, slot: jax.Array,
+                   weight: jax.Array) -> jax.Array:
+    """Inverse transform: gather rows back per (token, k) and weighted-sum."""
+    S, K = slot.shape
+    rows = layout_transform.gather_rows(
+        buffer, slot.reshape(-1), INTERPRET).reshape(S, K, -1)
+    w = (weight * (slot >= 0)).astype(buffer.dtype)
+    return jnp.einsum("skd,sk->sd", rows, w)

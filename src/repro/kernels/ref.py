@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-asserted in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_topk_gate(logits: jax.Array, k: int):
+    """Oracle for kernels.topk_gate.fused_topk_gate."""
+    logits = logits.astype(jnp.float32)
+    rowmax = jnp.max(logits, axis=-1, keepdims=True)
+    sumexp = jnp.sum(jnp.exp(logits - rowmax), axis=-1, keepdims=True)
+    vals, idx = jax.lax.top_k(logits, k)
+    return vals, idx.astype(jnp.int32), rowmax, sumexp
+
+
+def ref_gather_rows(src: jax.Array, idx: jax.Array):
+    """Oracle for kernels.layout_transform.gather_rows."""
+    safe = jnp.maximum(idx, 0)
+    out = src[safe]
+    return jnp.where((idx >= 0)[:, None], out, 0)

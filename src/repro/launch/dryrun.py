@@ -1,0 +1,473 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) and
+extract roofline terms — NO real allocation (ShapeDtypeStruct stand-ins).
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init); smoke tests / benches import other modules and see
+1 device.
+
+Per pair this produces a JSON record in experiments/dryrun/:
+  memory_analysis   bytes/device (args, temps, output, aliased)
+  cost_analysis     per-device HLO FLOPs + bytes accessed
+  collectives       per-op kind / wire bytes / group size, parsed from
+                    the compiled HLO (cost_analysis has no collectives)
+  roofline          the three terms in seconds + dominant bottleneck
+                    (v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+                    ICI, DCN for pod-crossing groups)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.core.config import INPUT_SHAPES, TrainConfig
+from repro.data.pipeline import make_batch_specs
+from repro.launch import hlo_analysis
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as T
+from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.training.train_step import init_train_state, make_train_step
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (per-chip effective, one direction)
+DCN_BW = 6.25e9              # B/s / chip across pods
+
+# gemma2 runs long_500k as the documented capped-global-window variant
+LONG_CONTEXT_VARIANT = {"gemma2-9b"}
+
+# dry-run training defaults: block remat + f32 master/moments
+DRYRUN_TCFG = TrainConfig(remat="block", microbatches=1)
+# the giant MoE config needs bf16 moments to fit 16 GB/chip (EXPERIMENTS.md)
+DRYRUN_TCFG_GIANT = TrainConfig(remat="block", microbatches=1,
+                                optimizer_state_dtype="bfloat16")
+GIANT = {"llama4-maverick-400b-a17b"}
+
+
+def eligible(arch: str, shape_name: str) -> Optional[str]:
+    """None if the pair runs; otherwise the skip reason (DESIGN.md §skips)."""
+    cfg = configs.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "decode" and not cfg.has_decode:
+        return "encoder-only: no decode step"
+    if shape_name == "long_500k":
+        if not cfg.has_decode:
+            return "encoder-only: no decode step"
+        if not (cfg.is_subquadratic or arch in LONG_CONTEXT_VARIANT):
+            return "pure full-attention: 524k dense-KV decode not faked"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|all-to-all|reduce-scatter|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, pod_size: int = 256) -> Dict[str, Any]:
+    """Per-device wire bytes per collective kind (ring-algorithm costs)."""
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        result = m.group(1) or m.group(2) or ""
+        size = _shape_bytes(result)
+        gm = _GROUPS_RE.search(line)
+        gsize = int(gm.group(2)) if gm else 1
+        # does any group cross the pod boundary? (iota pattern heuristic:
+        # explicit long lists are rare; check '<=[2,' leading pod dim usage)
+        crosses_pod = False
+        im = re.search(r"<=\[([0-9,]+)\]", line)
+        if im:
+            iota_dims = [int(x) for x in im.group(1).split(",")]
+            total = int(np.prod(iota_dims))
+            if total > pod_size and gsize > 1:
+                # conservative: a group spans pods if group elements stride
+                # beyond one pod — flag when the group covers dims that
+                # include the leading (pod) axis
+                ngroups = int(gm.group(1)) if gm else 1
+                crosses_pod = ngroups * gsize > pod_size and \
+                    total // iota_dims[0] < gsize * ngroups
+        if kind == "all-reduce":
+            wire = 2 * size * (gsize - 1) / max(gsize, 1)
+        elif kind == "all-gather":
+            wire = size * (gsize - 1) / max(gsize, 1)
+        elif kind == "reduce-scatter":
+            wire = size * (gsize - 1)
+        elif kind == "all-to-all":
+            wire = size * (gsize - 1) / max(gsize, 1)
+        else:  # collective-permute
+            wire = size
+        ops.append({"kind": kind, "result_bytes": size, "group": gsize,
+                    "wire_bytes": wire, "dcn": bool(crosses_pod)})
+    agg: Dict[str, float] = {}
+    for o in ops:
+        agg[o["kind"]] = agg.get(o["kind"], 0.0) + o["wire_bytes"]
+    return {"ops": ops, "bytes_by_kind": agg,
+            "total_wire_bytes": sum(o["wire_bytes"] for o in ops),
+            "dcn_wire_bytes": sum(o["wire_bytes"] for o in ops if o["dcn"]),
+            "count": len(ops)}
+
+
+# ---------------------------------------------------------------------------
+# model-FLOPs estimate (6·N·D with N = active params)
+# ---------------------------------------------------------------------------
+
+def active_params(cfg) -> float:
+    """Parameter count, counting only top-k + shared experts of MoE layers."""
+    d, f, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    total = V * d * (1 if cfg.tie_embeddings else 2) if cfg.frontend is None \
+        else V * d
+    per = {"glu": 3 * d * f, "plain": 2 * d * f}
+    mlp_p = per["glu"] if cfg.act in ("swiglu", "geglu") else per["plain"]
+    attn_p = 0
+    if cfg.attention is not None:
+        hd = cfg.head_dim
+        a = cfg.attention
+        attn_p = d * hd * (a.num_heads * 2 + a.num_kv_heads * 2)
+    for kind in cfg.block_pattern:
+        n = cfg.num_layers // len(cfg.block_pattern)
+        if kind in ("attn", "local", "global", "dense"):
+            total += n * (attn_p + mlp_p)
+        elif kind == "moe":
+            fe = cfg.moe.d_ff_expert or f
+            e_p = (3 if cfg.act in ("swiglu", "geglu") else 2) * d * fe
+            from repro.core import gating
+            k = gating.gate_k(cfg.moe)
+            total += n * (attn_p + (k + cfg.moe.num_shared_experts) * e_p
+                          + d * cfg.moe.num_experts)
+        elif kind in ("mamba", "mamba_sa"):
+            d_in = cfg.ssm.expand * d
+            H = d_in // cfg.ssm.head_dim
+            total += n * (d * (2 * d_in + 2 * cfg.ssm.n_groups * cfg.ssm.d_state + H)
+                          + d_in * d)
+            if kind == "mamba_sa":
+                total += n * (d * 2 * 16)       # lora only; shared attn once
+        elif kind == "rwkv":
+            total += n * (5 * d * d + mlp_p)
+    if "mamba_sa" in cfg.block_pattern:
+        total += attn_p
+    return float(total)
+
+
+def attention_flops_fwd(cfg, shape) -> float:
+    """Forward attention-matmul FLOPs (QKᵀ + PV): 4·tokens·S_ctx·H·hd.
+    S_ctx: causal average S/2 for full attention, the window for SWA
+    layers, the full cache length for decode."""
+    if cfg.attention is None:
+        return 0.0
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    H, hd = cfg.attention.num_heads, cfg.head_dim
+    total = 0.0
+    per = cfg.num_layers // len(cfg.block_pattern)
+    for kind in cfg.block_pattern:
+        if kind in ("mamba", "rwkv"):
+            continue
+        win = cfg.local_window if kind == "local" else cfg.attention.window
+        if shape.mode == "decode":
+            ctx = min(shape.seq_len, win) if win else shape.seq_len
+        else:
+            ctx = min(shape.seq_len, win) if win else shape.seq_len / 2
+        n = per if kind != "mamba_sa" else per
+        total += n * 4.0 * tokens * ctx * H * hd
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """Param term (6·N_active·D train / 2·N·D inference) + attention term
+    (3×fwd for train — bwd counts double)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    attn_mult = 3.0 if shape.mode == "train" else 1.0
+    return (mult * active_params(cfg) * tokens
+            + attn_mult * attention_flops_fwd(cfg, shape))
+
+
+# ---------------------------------------------------------------------------
+# lowering per mode
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, a2a: str = None,
+                dispatch: str = None):
+    """ShapeDtypeStruct stand-ins for every model input of this pair."""
+    cfg = _cfg_with_overrides(arch, a2a=a2a, dispatch=dispatch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "train":
+        batch = make_batch_specs(cfg, shape, dtype=cfg.dtype)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=mesh_lib.batch_shardings(
+                    mesh, {"x": s})["x"]), batch)
+    B = shape.global_batch
+    dp = mesh_lib.dp_axes(mesh)
+
+    def _tok(shape_, dtype_):
+        sh = mesh_lib.fit_spec(mesh, P(dp), shape_)
+        return jax.ShapeDtypeStruct(shape_, dtype_, sharding=sh)
+
+    if shape.mode == "prefill":
+        if cfg.frontend is not None:
+            return _tok((B, shape.seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return _tok((B, shape.seq_len), jnp.int32)
+    # decode: one token + caches
+    if cfg.frontend is not None:
+        tok = _tok((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        tok = _tok((B, 1), jnp.int32)
+    long_ctx = shape_name == "long_500k"
+    cache_shapes = jax.eval_shape(
+        lambda: T.init_caches(cfg, B, shape.seq_len, long_context=long_ctx,
+                              dtype=jnp.dtype(cfg.dtype)))
+    shardings = mesh_lib.cache_shardings(mesh, cache_shapes)
+    caches = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_shapes, shardings)
+    return tok, caches
+
+
+def _cfg_with_overrides(arch, *, a2a=None, dispatch=None, capacity=None):
+    import dataclasses
+    cfg = configs.get_config(arch)
+    if cfg.moe is not None and (a2a or dispatch or capacity):
+        kw = {}
+        if a2a:
+            kw["a2a"] = a2a
+        if dispatch:
+            kw["dispatch"] = dispatch
+        if capacity:
+            kw["capacity_factor"] = capacity
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, **kw))
+    return cfg
+
+
+def lower_pair(arch: str, shape_name: str, mesh, *, a2a=None, dispatch=None,
+               tcfg: TrainConfig = None):
+    """Build + .lower() the step function for one (arch, shape, mesh)."""
+    cfg = _cfg_with_overrides(arch, a2a=a2a, dispatch=dispatch)
+    shape = INPUT_SHAPES[shape_name]
+    long_ctx = shape_name == "long_500k"
+    if shape.mode == "train":
+        tcfg = tcfg or (DRYRUN_TCFG_GIANT if arch in GIANT else DRYRUN_TCFG)
+        state_shapes = jax.eval_shape(
+            lambda r: init_train_state(r, cfg, tcfg), jax.random.key(0))
+        state = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            state_shapes, mesh_lib.state_shardings(mesh, state_shapes))
+        batch = input_specs(arch, shape_name, mesh, a2a=a2a, dispatch=dispatch)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                   sharding=NamedSharding(mesh, P()))
+        fn = make_train_step(cfg, tcfg, mesh)
+
+        def step(state, batch, rng_raw):
+            return fn(state, batch, jax.random.wrap_key_data(rng_raw))
+
+        return jax.jit(step, donate_argnums=(0,)).lower(state, batch, rng)
+    # inference params (no optimizer state) — served in the model compute
+    # dtype (bf16); the router weight stays f32 (gating numerics)
+    params_shapes = jax.eval_shape(lambda r: T.init_model(r, cfg),
+                                   jax.random.key(0))
+    serve_dt = jnp.dtype(cfg.dtype)
+
+    def _serve_cast(path, s):
+        name = str(getattr(path[-1], "key", ""))
+        if s.dtype == jnp.float32 and name != "gate_w":
+            return jax.ShapeDtypeStruct(s.shape, serve_dt)
+        return s
+
+    params_shapes = jax.tree_util.tree_map_with_path(_serve_cast, params_shapes)
+    fsdp = mesh_lib.needs_fsdp(mesh, params_shapes, budget_bytes=4e9)
+    etp = (shape.mode == "decode" and cfg.moe is not None
+           and os.environ.get("REPRO_EXPERT_TP", "1") == "1")
+    params = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_shapes, mesh_lib.param_shardings(mesh, params_shapes, fsdp=fsdp,
+                                                expert_tp=etp))
+    if shape.mode == "prefill":
+        tokens = input_specs(arch, shape_name, mesh, a2a=a2a, dispatch=dispatch)
+        if cfg.has_decode:
+            fn = make_prefill_step(cfg, mesh, cache_len=shape.seq_len)
+        else:
+            def fn(params, tokens):       # encoder: full forward, no cache
+                h, aux, _ = T.forward(params, tokens, cfg, mesh=mesh)
+                return T.logits_from_hidden(params, cfg, h, mesh)
+        return jax.jit(fn).lower(params, tokens)
+    # decode
+    tok, caches = input_specs(arch, shape_name, mesh, a2a=a2a, dispatch=dispatch)
+    fn = make_serve_step(cfg, mesh, long_context=long_ctx)
+    return jax.jit(fn, donate_argnums=(2,)).lower(params, tok, caches)
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+def roofline(record: Dict[str, Any], mesh_shape, arch, shape_name) -> Dict:
+    cfg = configs.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    chips = int(np.prod([v for v in mesh_shape.values()]))
+    ha = record["hlo_analysis"]
+    flops_dev = ha["flops"]                       # per-device, loop-corrected
+    bytes_dev = ha["hbm_bytes"]
+    coll = record["collectives"]
+    ici_bytes = coll["total_wire_bytes"] - coll["dcn_wire_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = ici_bytes / ICI_BW + coll["dcn_wire_bytes"] / DCN_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * chips
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_fraction": mf / hlo_total if hlo_total else 0.0,
+        "step_time_bound_s": max(terms.values()),
+        "chips": chips,
+    }
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             a2a=None, dispatch=None, tag: str = "", save: bool = True,
+             tcfg: TrainConfig = None) -> Dict[str, Any]:
+    reason = eligible(arch, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "a2a": a2a, "dispatch": dispatch}
+    if reason is not None:
+        rec["skipped"] = reason
+        if save:
+            _save(rec, tag)
+        return rec
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = lower_pair(arch, shape_name, mesh, a2a=a2a, dispatch=dispatch,
+                         tcfg=tcfg)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    rec["memory_analysis"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_per_device_bytes": (ma.argument_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+    }
+    # XLA's cost_analysis counts while-loop bodies once — kept for
+    # reference only; the roofline uses the loop-corrected HLO analyzer.
+    rec["cost_analysis_raw"] = {
+        k: v for k, v in compiled.cost_analysis().items()
+        if k in ("flops", "bytes accessed")}
+    ha = hlo_analysis.analyze(compiled.as_text())
+    rec["hlo_analysis"] = {"flops": ha["flops"], "hbm_bytes": ha["hbm_bytes"],
+                           "traffic_top": ha["traffic_top"]}
+    rec["collectives"] = ha["collectives"]
+    rec["roofline"] = roofline(rec, dict(mesh.shape), arch, shape_name)
+    rec["lower_s"] = round(t1 - t0, 2)
+    rec["compile_s"] = round(t2 - t1, 2)
+    if save:
+        _save(rec, tag)
+    return rec
+
+
+def _save(rec, tag=""):
+    d = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                     "experiments", "dryrun")
+    os.makedirs(d, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if rec.get("a2a"):
+        name += f"__a2a-{rec['a2a']}"
+    if rec.get("dispatch"):
+        name += f"__disp-{rec['dispatch']}"
+    if tag:
+        name += f"__{tag}"
+    with open(os.path.join(d, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--a2a", default=None, choices=[None, "flat", "hierarchical"])
+    ap.add_argument("--dispatch", default=None, choices=[None, "sort", "dense"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    pairs = []
+    if args.all:
+        for a in configs.ASSIGNED:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape
+        pairs = [(args.arch, args.shape)]
+    for a, s in pairs:
+        rec = run_pair(a, s, multi_pod=args.multi_pod, a2a=args.a2a,
+                       dispatch=args.dispatch, tag=args.tag)
+        if "skipped" in rec:
+            print(f"{a:28s} {s:12s} SKIP: {rec['skipped']}")
+        else:
+            r = rec["roofline"]
+            print(f"{a:28s} {s:12s} {rec['mesh']:8s} "
+                  f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                  f"coll={r['collective_s']:.3e}s dom={r['dominant']:10s} "
+                  f"mem/dev={rec['memory_analysis']['peak_per_device_bytes']/2**30:.2f}GiB "
+                  f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+
+
+if __name__ == "__main__":
+    main()

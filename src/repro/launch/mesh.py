@@ -1,0 +1,209 @@
+"""Production mesh + parameter/batch sharding rules.
+
+Mesh: ``(data=16, model=16)`` single pod (256 v5e chips) or
+``(pod=2, data=16, model=16)`` for the 2-pod 512-chip run.  Constructed
+by a FUNCTION so importing this module never touches jax device state.
+
+Sharding policy (DESIGN.md §4):
+  batch            → (pod, data)
+  experts          → model  (expert parallelism; the AllToAll axis)
+  expert weights   → additionally FSDP-shard d_model over data; the
+                     shard_map in_spec P(model, None, None) makes XLA
+                     all-gather them per layer (ZeRO-3) and reduce-
+                     scatter the gradients automatically
+  attention heads / FFN hidden → model (tensor parallelism)
+  dense weights    → additionally FSDP over data
+  vocab (embed + lm_head + logits) → model
+  norms / small vectors → replicated
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    assert len(devs) >= n, (
+        f"need {n} devices, have {len(devs)} — the dry-run entrypoint must "
+        f"set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+        f"any jax import")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_smoke_mesh(shape: Tuple[int, ...] = (1, 1),
+                    axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules (path + ndim → PartitionSpec)
+# ---------------------------------------------------------------------------
+
+# trailing-dim specs keyed by leaf name; a leading None is prepended for
+# the scan (super-block) dimension of leaves under "blocks/".
+_RULES = {
+    # embeddings / head
+    "embed":   ("model", "data"),
+    "lm_head": ("data", "model"),
+    # attention
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    # mlp (and rwkv channel-mix)
+    "w_in_mlp":  ("data", "model"),
+    "w_out_mlp": ("model", "data"),
+    # moe experts: (E, d, f) / (E, f, d) — EP over model + FSDP(d) over data
+    "w_up_moe":   ("model", "data", None),
+    "w_gate_moe": ("model", "data", None),
+    "w_out_moe":  ("model", None, "data"),
+    # expert-TP serving layout (decode): f dim over data, zero-reshard
+    # against the shard_map in_specs of moe_block_local's TP mode
+    "w_up_moe_tp":   ("model", None, "data"),
+    "w_gate_moe_tp": ("model", None, "data"),
+    "w_out_moe_tp":  ("model", "data", None),
+    "gate_w": (None, None),
+    # mamba2
+    "w_in_mamba":  ("data", "model"),
+    "w_out_mamba": ("model", "data"),
+    "conv_w": (None, "model"), "conv_b": ("model",),
+    # rwkv6
+    "wr": ("data", "model"), "wg": ("data", "model"),
+    "mix_a": ("data", None), "decay_a": ("data", None),
+    # zamba2 lora
+    "sa_lora_a": ("data", None), "sa_lora_b": (None, "data"),
+}
+
+
+def _leaf_spec(path: str, ndim: int, expert_tp: bool = False) -> P:
+    parts = path.split("/")
+    name = parts[-1]
+    in_blocks = parts[0] == "blocks"
+    parent = parts[-2] if len(parts) > 1 else ""
+    key = name
+    if name in ("w_in", "w_out", "w_up", "w_gate"):
+        if parent == "moe":
+            key = f"{name}_moe" + ("_tp" if expert_tp else "")
+        elif parent == "mamba":
+            key = f"{name}_mamba"
+        else:
+            key = f"{name}_mlp"
+    dims = _RULES.get(key)
+    if dims is None:
+        dims = ()                       # replicate (norms, biases, vectors)
+    spec: Tuple[Any, ...] = tuple(dims)
+    lead = ndim - len(spec)
+    assert lead >= 0, (path, ndim, spec)
+    return P(*((None,) * lead + spec))
+
+
+def fit_spec(mesh: Mesh, spec: P, shape) -> NamedSharding:
+    """Drop spec axes that don't exist in the mesh or don't divide the
+    dimension (e.g. vocab 92553 on a 16-wide axis, batch 1 on data)."""
+    dims = []
+    for i, s in enumerate(tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        if s is None:
+            dims.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if n <= 1 or shape[i] % n != 0:
+            dims.append(None)
+        else:
+            dims.append(axes if len(axes) > 1 else axes[0])
+    return NamedSharding(mesh, P(*dims))
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        yield key, leaf
+    return
+
+
+def needs_fsdp(mesh: Mesh, params_shapes, *, budget_bytes: float = 6e9) -> bool:
+    """FSDP-shard weights over data iff master+moments (12 B/param) would
+    exceed ``budget_bytes`` per device under model-axis sharding alone."""
+    total = sum(np.prod(l.shape) for l in jax.tree.leaves(params_shapes))
+    per_dev = total * 12.0 / mesh.shape.get("model", 1)
+    return per_dev > budget_bytes
+
+
+def param_shardings(mesh: Mesh, params_shapes, *, fsdp: bool = True,
+                    expert_tp: bool = False) -> Any:
+    """Tree of NamedShardings matching a params (or m/v moments) tree.
+
+    ``fsdp=False`` drops the data-axis (ZeRO) sharding — pure TP+replica —
+    which avoids per-use weight all-gathers for models that fit.
+    ``expert_tp=True`` stores expert weights in the serving (decode)
+    layout: f over data, matching moe_block_local's TP in_specs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        spec = _leaf_spec(key, len(leaf.shape), expert_tp)
+        if not fsdp and not (expert_tp and "/moe/" in key):
+            spec = P(*(None if s == "data" else s for s in tuple(spec)))
+        out.append(fit_spec(mesh, spec, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_shardings(mesh: Mesh, state_shapes, *, fsdp: bool = None) -> Any:
+    """Shardings for a TrainState(params, opt{m,v,count}, step)."""
+    if fsdp is None:
+        fsdp = needs_fsdp(mesh, state_shapes.params)
+    p = param_shardings(mesh, state_shapes.params, fsdp=fsdp)
+    repl = NamedSharding(mesh, P())
+    return type(state_shapes)(
+        params=p,
+        opt={"m": param_shardings(mesh, state_shapes.opt["m"], fsdp=fsdp),
+             "v": param_shardings(mesh, state_shapes.opt["v"], fsdp=fsdp),
+             "count": repl},
+        step=repl)
+
+
+def batch_shardings(mesh: Mesh, batch_shapes) -> Any:
+    """Batch dim → (pod, data); everything else replicated."""
+    dp = dp_axes(mesh)
+    return jax.tree.map(
+        lambda s: fit_spec(mesh, P(dp), s.shape), batch_shapes)
+
+
+def cache_shardings(mesh: Mesh, cache_shapes) -> Any:
+    """Decode caches: leaves are (NSB, B, ...) — batch dim → (pod, data);
+    kv-head / ssm-head dims → model where divisible."""
+    dp = dp_axes(mesh)
+    msize = mesh.shape.get("model", 1)
+
+    def spec(leaf):
+        shp = leaf.shape
+        if len(shp) <= 1:                    # pos scalars per super-block
+            return NamedSharding(mesh, P())
+        dims = [None, dp] + [None] * (len(shp) - 2)   # (NSB, B, ...)
+        # shard ONE inner axis over model.  Preference order: the
+        # kv/ssm-head axis (dim -2: TP-style, no gather at decode), else
+        # the cache-seq / state axis (dim 2: memory-balanced, XLA
+        # gathers per layer), else the channel axis (dim -1).
+        if msize > 1 and len(shp) >= 4:
+            for cand in (len(shp) - 2, 2, len(shp) - 1):
+                if cand >= 2 and shp[cand] % msize == 0:
+                    dims[cand] = "model"
+                    break
+        return fit_spec(mesh, P(*dims), shp)
+
+    return jax.tree.map(spec, cache_shapes)

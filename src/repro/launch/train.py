@@ -1,0 +1,87 @@
+"""End-to-end training driver.
+
+CPU-scale usage (the examples use this):
+  PYTHONPATH=src python -m repro.launch.train --arch hetumoe-paper-16e \\
+      --steps 200 --batch 8 --seq 128 --smoke
+
+On a real pod the same driver runs with ``--mesh 16x16`` under the
+production mesh; data parallel input feeding is per-host via the
+deterministic synthetic pipeline (every host generates its shard).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.config import TrainConfig
+from repro.data import SyntheticLM
+from repro.launch import mesh as mesh_lib
+from repro.training import make_train_step
+from repro.training.train_step import init_train_state
+from repro.checkpoint import save_checkpoint
+
+
+def run(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
+        lr: float = 3e-3, microbatches: int = 1, remat: str = "none",
+        mesh_shape=(1, 1), log_every: int = 10, ckpt_dir: str = None,
+        seed: int = 0):
+    cfg = configs.smoke_config(arch) if smoke else configs.get_config(arch)
+    tcfg = TrainConfig(learning_rate=lr, warmup_steps=max(steps // 10, 1),
+                       total_steps=steps, microbatches=microbatches,
+                       remat=remat, seed=seed)
+    mesh = mesh_lib.make_smoke_mesh(tuple(mesh_shape))
+    rng = jax.random.PRNGKey(seed)
+    state = init_train_state(rng, cfg, tcfg)
+    n_params = sum(np.prod(p.shape) for p in jax.tree.leaves(state.params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M mesh={dict(mesh.shape)}")
+    ds = SyntheticLM(cfg, batch=batch, seq_len=seq, seed=seed)
+    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh), donate_argnums=(0,))
+    history = []
+    t0 = time.time()
+    for s in range(steps):
+        bt = ds.next_batch(s)
+        state, m = step_fn(state, bt, jax.random.fold_in(rng, s))
+        if s % log_every == 0 or s == steps - 1:
+            m = {k: float(v) for k, v in m.items()}
+            dt = time.time() - t0
+            tput = batch * seq * (s + 1) / max(dt, 1e-9)
+            print(f"step {s:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                  f"aux {m['aux']:.4f} gnorm {m['grad_norm']:.2f} "
+                  f"tok/s {tput:,.0f}")
+            history.append({"step": s, **m})
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, state, steps)
+        print("checkpoint saved to", ckpt_dir)
+    return state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU scale)")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "block", "full"])
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM data×model mesh, e.g. 1x1 (CPU) or 16x16")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
+    run(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+        smoke=args.smoke, lr=args.lr, microbatches=args.microbatches,
+        remat=args.remat, mesh_shape=mesh_shape, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Modality frontends — STUBS per the assignment carve-out.
+
+``[audio]`` and ``[vlm]`` architectures specify the transformer backbone
+only; the conv feature extractor (hubert) and the ViT+projector
+(internvl2) are replaced by providers of correctly-shaped precomputed
+embeddings.  ``input_specs()`` in launch/dryrun.py consumes these shapes;
+the synthetic data pipeline generates matching random embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+
+
+def frontend_embedding_shape(cfg: ModelConfig, batch: int, seq: int):
+    """Shape of the precomputed embedding stream the backbone consumes.
+
+    audio  — HuBERT conv extractor output: one frame embedding per 20 ms,
+             projected to d_model (stub: (B, S, d) directly).
+    vision — InternViT patch embeddings after the MLP projector,
+             interleaved with text-token embeddings (stub: the merged
+             (B, S, d) stream).
+    """
+    assert cfg.frontend in ("audio", "vision"), cfg.frontend
+    return (batch, seq, cfg.d_model)
+
+
+def synthetic_embeddings(rng: jax.Array, cfg: ModelConfig, batch: int, seq: int,
+                         dtype=jnp.bfloat16) -> jax.Array:
+    return jax.random.normal(
+        rng, frontend_embedding_shape(cfg, batch, seq), dtype) * 0.02

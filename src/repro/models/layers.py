@@ -1,0 +1,76 @@
+"""Shared building blocks: norms, MLPs, embeddings, softcaps.
+
+All modules are functional ``init_* / apply`` pairs over plain dicts.
+Parameters are stored f32 (master copy); forward casts to the model's
+compute dtype at use sites.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap·tanh(x/cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def init_norm(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)       # rmsnorm stores scale-1
+
+
+def init_mlp(rng: jax.Array, d: int, f: int, act: str) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(rng)
+    cols = 2 * f if act in ("swiglu", "geglu") else f
+    return {
+        "w_in": jax.random.normal(k1, (d, cols), jnp.float32) * d ** -0.5,
+        "w_out": jax.random.normal(k2, (f, d), jnp.float32) * f ** -0.5,
+    }
+
+
+def apply_mlp(params: Dict[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+    dt = x.dtype
+    h = x @ params["w_in"].astype(dt)
+    if act in ("swiglu", "geglu"):
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return h @ params["w_out"].astype(dt)
+
+
+def init_embedding(rng: jax.Array, vocab: int, d: int) -> jax.Array:
+    return jax.random.normal(rng, (vocab, d), jnp.float32) * d ** -0.5
+
+
+def embed(table: jax.Array, ids: jax.Array, dtype, scale: bool) -> jax.Array:
+    x = table.astype(dtype)[ids]
+    if scale:
+        x = x * jnp.asarray(table.shape[-1] ** 0.5, dtype)
+    return x
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array, *, tied: bool) -> jax.Array:
+    w = table_or_head.astype(x.dtype)
+    return x @ (w.T if tied else w)

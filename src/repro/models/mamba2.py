@@ -1,0 +1,206 @@
+"""Mamba-2 (SSD) block — chunked scan for train/prefill, O(1) decode.
+
+State-space duality form (Dao & Gu 2024), scalar decay per head:
+
+    S_t = a_t · S_{t-1} + Δ_t · (x_t ⊗ B_t)       S ∈ R^{hd×N}
+    y_t = S_t C_t + D ⊙ x_t,   a_t = exp(-exp(A_log)·Δ_t)
+
+Because the decay is scalar per head the chunked pairwise matrix
+``exp(cum_t − cum_s)`` is formed directly (always ≤ 1 — no clipping
+needed, unlike RWKV-6's per-channel decay).  Intra-chunk work is two
+(L×L) matmuls per head on the MXU; inter-chunk state is a ``lax.scan``.
+
+Used by zamba2 (hybrid Mamba2 + shared-attention architecture).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import SSMConfig
+from repro.models.layers import rms_norm
+
+
+def _dims(cfg: SSMConfig, d: int):
+    d_in = cfg.expand * d
+    H = d_in // cfg.head_dim
+    return d_in, H, cfg.n_groups, cfg.d_state
+
+
+def init_mamba_block(rng: jax.Array, cfg: SSMConfig, d: int) -> Dict[str, jax.Array]:
+    d_in, H, G, N = _dims(cfg, d)
+    ks = jax.random.split(rng, 6)
+    s = d ** -0.5
+    conv_ch = d_in + 2 * G * N
+    return {
+        # fused in_proj → [z, x, B, C, dt]
+        "w_in": jax.random.normal(ks[0], (d, 2 * d_in + 2 * G * N + H),
+                                  jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                    jnp.float32) * cfg.conv_width ** -0.5,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "w_out": jax.random.normal(ks[3], (d_in, d), jnp.float32) * d_in ** -0.5,
+    }
+
+
+def _split_proj(p, u, cfg: SSMConfig, d: int):
+    d_in, H, G, N = _dims(cfg, d)
+    h = u @ p["w_in"].astype(u.dtype)
+    z = h[..., :d_in]
+    xBC = h[..., d_in:2 * d_in + 2 * G * N]
+    dt = h[..., 2 * d_in + 2 * G * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, *, state=None):
+    """Depthwise causal conv, width K.  xBC (B,S,C); state (B,K-1,C) holds
+    the previous K-1 inputs (decode carry).  Returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+    full = jnp.concatenate([state.astype(xBC.dtype), xBC], axis=1)
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i].astype(xBC.dtype)
+              for i in range(K))
+    out = jax.nn.silu(out + b.astype(xBC.dtype))
+    return out, full[:, -(K - 1):]
+
+
+def _ssd_chunk(Cc, Bc, Xc, cum, dtc, state):
+    """One chunk.  Cc/Bc (B,L,H,N) f32, Xc (B,L,H,hd), cum/dtc (B,L,H),
+    state (B,H,hd,N)."""
+    decay_out = jnp.exp(cum)                                   # (B,L,H)
+    # inter-chunk: y_t += exp(cum_t) · C_t S0
+    y = jnp.einsum("blhn,bhpn,blh->blhp", Cc, state, decay_out)
+    # intra-chunk: pairwise scalar decays (≤1), lower-tri inclusive
+    pair = jnp.exp(cum[:, :, None] - cum[:, None, :])          # (B,L,L,H)
+    L = Cc.shape[1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    pair = jnp.where(mask[None, :, :, None], pair, 0.0)
+    scores = jnp.einsum("blhn,bmhn,blmh,bmh->bhlm", Cc, Bc, pair, dtc)
+    y = y + jnp.einsum("bhlm,bmhp->blhp", scores, Xc)
+    # carry: S' = exp(cum_L) S0 + Σ_s exp(cum_L - cum_s) Δ_s (x_s ⊗ B_s)
+    wlast = jnp.exp(cum[:, -1:] - cum) * dtc                   # (B,L,H)
+    state = jnp.exp(cum[:, -1])[..., None, None] * state + \
+        jnp.einsum("blh,blhp,blhn->bhpn", wlast, Xc, Bc)
+    return y, state
+
+
+def _head_constraint(mesh):
+    """§Perf (zamba2 train hillclimb): Mamba blocks are head-parallel —
+    every op between in_proj and out_proj is independent per head — but
+    the chunked-scan reshapes defeat XLA's sharding propagation and it
+    falls back to all-gathering the full (B,S,14k) activations per block
+    (1.6 TB/dev/step).  Pinning the head axis to `model` keeps the whole
+    SSD pipeline TP with a single out-proj all-reduce, like attention."""
+    import os
+    if mesh is None or mesh.devices.size == 1 \
+            or os.environ.get("REPRO_MAMBA_TP", "1") != "1":
+        return lambda a, axis: a
+    from jax.sharding import NamedSharding, PartitionSpec
+    dp = tuple(x for x in mesh.axis_names if x in ("pod", "data"))
+    msize = mesh.shape.get("model", 1)
+
+    def constrain(a, axis):
+        if a.shape[axis] % msize:
+            return a
+        dims = [None] * a.ndim
+        dims[0] = dp
+        dims[axis] = "model"
+        return jax.lax.with_sharding_constraint(
+            a, NamedSharding(mesh, PartitionSpec(*dims)))
+    return constrain
+
+
+def mamba_forward(p: Dict[str, jax.Array], u: jax.Array, cfg: SSMConfig, d: int,
+                  mesh=None) -> Tuple[jax.Array, dict]:
+    """Full-sequence pass.  u (B,S,d) → (y (B,S,d), final ssm+conv state)."""
+    B, S, _ = u.shape
+    d_in, H, G, N = _dims(cfg, d)
+    hd = cfg.head_dim
+    cons = _head_constraint(mesh)
+    z, xBC, dt = _split_proj(p, u, cfg, d)
+    z = cons(z, 2)
+    xBC = cons(xBC, 2)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xBC = cons(xBC, 2)
+    x = xBC[..., :d_in].reshape(B, S, H, hd).astype(jnp.float32)
+    Bm = xBC[..., d_in:d_in + G * N].reshape(B, S, G, N).astype(jnp.float32)
+    Cm = xBC[..., d_in + G * N:].reshape(B, S, G, N).astype(jnp.float32)
+    rep = H // G
+    x = cons(x, 2)
+    Bh = cons(jnp.repeat(Bm, rep, axis=2), 2)                   # (B,S,H,N)
+    Ch = cons(jnp.repeat(Cm, rep, axis=2), 2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    dt = cons(dt, 2)
+    loga = -jnp.exp(p["A_log"])[None, None] * dt                 # log a_t ≤ 0
+    L = min(cfg.chunk_size, S)
+    while S % L:                 # largest divisor of S ≤ chunk_size
+        L -= 1
+    nc = S // L
+
+    def chunks(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    state0 = jnp.zeros((B, H, hd, N), jnp.float32)
+
+    # checkpoint: otherwise scan's VJP stacks every chunk's (L,L,H)
+    # pairwise-decay residuals across all chunks (3.5 GiB/dev each at
+    # zamba2 train_4k scale); recompute them in backward instead
+    @jax.checkpoint
+    def body(state, inp):
+        Cc, Bc, Xc, lac, dtc = inp
+        cum = jnp.cumsum(lac, axis=1)
+        y, state = _ssd_chunk(Cc, Bc, Xc, cum, dtc, state)
+        return state, y
+
+    state, ys = lax.scan(body, state0, (chunks(Ch), chunks(Bh), chunks(x),
+                                        chunks(loga), chunks(dt)))
+    y = cons(ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd), 2)
+    y = y + p["D"][None, None, :, None] * x
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["w_out"].astype(u.dtype), \
+        {"s": state, "conv": conv_state, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def init_mamba_state(cfg: SSMConfig, batch: int, d: int):
+    d_in, H, G, N = _dims(cfg, d)
+    return {"s": jnp.zeros((batch, H, cfg.head_dim, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * G * N),
+                              jnp.float32),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def mamba_decode_step(p: Dict[str, jax.Array], u: jax.Array, state, cfg: SSMConfig,
+                      d: int) -> Tuple[jax.Array, dict]:
+    """One token.  u (B,1,d)."""
+    B = u.shape[0]
+    d_in, H, G, N = _dims(cfg, d)
+    hd = cfg.head_dim
+    z, xBC, dt = _split_proj(p, u, cfg, d)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                   state=state["conv"])
+    x = xBC[:, 0, :d_in].reshape(B, H, hd).astype(jnp.float32)
+    Bm = xBC[:, 0, d_in:d_in + G * N].reshape(B, G, N).astype(jnp.float32)
+    Cm = xBC[:, 0, d_in + G * N:].reshape(B, G, N).astype(jnp.float32)
+    rep = H // G
+    Bh, Ch = jnp.repeat(Bm, rep, axis=1), jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None] * dt)
+    S0 = state["s"]
+    s_new = a[..., None, None] * S0 + \
+        jnp.einsum("bh,bhp,bhn->bhpn", dt, x, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", s_new, Ch) + p["D"][None, :, None] * x
+    y = y.reshape(B, 1, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["w_out"].astype(u.dtype), \
+        {"s": s_new, "conv": conv_state, "pos": state["pos"] + 1}

@@ -1,0 +1,176 @@
+"""RWKV-6 "Finch" time-mix + channel-mix (arXiv:2404.05892).
+
+The defining feature vs RWKV-5/linear attention: the per-channel decay
+``w_t`` is DATA-DEPENDENT (a low-rank MLP of the token-shifted input), as
+is the token-shift interpolation itself.
+
+Recurrence per head (state S ∈ R^{hd×hd}):
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+Training uses the chunked form: within a chunk of L tokens the pairwise
+decay factors as exp(cum_{t-1} - cum_s) with cum = Σ log w, so the intra-
+chunk term is a masked (r̃ k̃ᵀ) matmul — O(L²·hd) MXU work — and the
+inter-chunk term is carried by a ``lax.scan`` over chunk states.  The
+``exp(-cum)`` side is clipped at e³⁰ (contributions beyond that decay
+level are < e⁻³⁰ — below bf16 resolution anyway).
+
+Decode is the raw recurrence: O(1) time and memory per token — the reason
+rwkv6 runs the 524k-token decode shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import RWKVConfig
+from repro.models.layers import rms_norm
+
+_CLIP = 30.0
+
+
+def init_rwkv_block(rng: jax.Array, cfg: RWKVConfig, d: int) -> Dict[str, jax.Array]:
+    ks = jax.random.split(rng, 12)
+    s = d ** -0.5
+    H = d // cfg.head_dim
+    p = {
+        # token-shift interpolation: static μ per channel for (r,k,v,w,g)
+        # + data-dependent LoRA correction (the "6" in RWKV-6)
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),
+        "mix_a": jax.random.normal(ks[1], (d, cfg.mix_lora * 5), jnp.float32) * s,
+        "mix_b": jax.random.normal(ks[2], (5, cfg.mix_lora, d), jnp.float32)
+                 * cfg.mix_lora ** -0.5,
+        "wr": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "wk": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        "wv": jax.random.normal(ks[5], (d, d), jnp.float32) * s,
+        "wg": jax.random.normal(ks[6], (d, d), jnp.float32) * s,
+        "wo": jax.random.normal(ks[7], (d, d), jnp.float32) * s,
+        # data-dependent decay: w_t = exp(-exp(w0 + LoRA(x_w)))
+        "w0": jnp.full((d,), -6.0, jnp.float32) +
+              jax.random.normal(ks[8], (d,), jnp.float32) * 0.1,
+        "decay_a": jax.random.normal(ks[9], (d, cfg.decay_lora), jnp.float32) * s,
+        "decay_b": jax.random.normal(ks[10], (cfg.decay_lora, d), jnp.float32)
+                   * cfg.decay_lora ** -0.5,
+        "u": jax.random.normal(ks[11], (d,), jnp.float32) * 0.1,  # bonus
+        "ln_x": jnp.ones((d,), jnp.float32),       # per-head groupnorm scale
+    }
+    # channel mix (RWKV's FFN analogue) lives in transformer.py as an MLP
+    return p
+
+
+def _mix_inputs(p, x, x_prev):
+    """Data-dependent token shift → the 5 mixed streams (r,k,v,w,g).
+    x (B,S,d); x_prev is x shifted right one token (B,S,d)."""
+    dt = x.dtype
+    d = x.shape[-1]
+    delta = x_prev - x
+    # base mix + low-rank data-dependent correction
+    lora = jnp.tanh(x @ p["mix_a"].astype(dt))                  # (B,S,5*r)
+    lora = lora.reshape(*x.shape[:-1], 5, -1)
+    corr = jnp.einsum("bsfr,frd->bsfd", lora, p["mix_b"].astype(dt))
+    mix = p["mu"].astype(dt)[None, None] + corr                  # (B,S,5,d)
+    return x[..., None, :] + delta[..., None, :] * mix           # (B,S,5,d)
+
+
+def _rkvwg(p, x, x_prev, H, hd):
+    m = _mix_inputs(p, x, x_prev)
+    dt = x.dtype
+    B, S = x.shape[:2]
+    r = (m[..., 0, :] @ p["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (m[..., 1, :] @ p["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (m[..., 2, :] @ p["wv"].astype(dt)).reshape(B, S, H, hd)
+    logw = -jnp.exp(jnp.clip(
+        (m[..., 3, :].astype(jnp.float32) @ p["decay_a"]) @ p["decay_b"]
+        + p["w0"], -8.0, 1.0)).reshape(B, S, H, hd)              # log w_t < 0
+    g = jax.nn.silu(m[..., 4, :] @ p["wg"].astype(dt))
+    return r, k, v, logw, g
+
+
+def _chunk_scan(r, k, v, logw, u, state):
+    """One chunk: r,k,v (B,L,H,hd) f32, logw (B,L,H,hd), state (B,H,hd,hd).
+    Returns (o (B,L,H,hd), new_state)."""
+    B, L, H, hd = r.shape
+    cum = jnp.cumsum(logw, axis=1)                               # (B,L,H,hd)
+    cum_in = cum - logw                                           # Σ_{i<t}
+    r_dec = r * jnp.exp(cum_in)                                   # r̃_t
+    k_dec = k * jnp.exp(jnp.minimum(-cum, _CLIP))                 # k̃_s
+    # inter-chunk: o_t += r̃_t · S0
+    o = jnp.einsum("blhc,bhcv->blhv", r_dec, state)
+    # intra-chunk: strictly-lower pairwise + diagonal bonus term
+    scores = jnp.einsum("blhc,bmhc->bhlm", r_dec, k_dec)
+    mask = jnp.tril(jnp.ones((L, L), bool), -1)
+    scores = jnp.where(mask[None, None], scores, 0.0)
+    o = o + jnp.einsum("bhlm,bmhv->blhv", scores, v)
+    # diagonal bonus: o_t += (r_t · (u ⊙ k_t)) v_t
+    o = o + jnp.sum(r * (u[None, None] * k), axis=-1, keepdims=True) * v
+    # state: S' = diag(A_L) S0 + Σ_s diag(A_L/A_s) k_sᵀ v_s
+    decay_all = jnp.exp(cum[:, -1])                               # (B,H,hd)
+    k_carry = k * jnp.exp(jnp.minimum(cum[:, -1:] - cum, _CLIP))
+    new_state = decay_all[..., None] * state + \
+        jnp.einsum("blhc,blhv->bhcv", k_carry, v)
+    return o, new_state
+
+
+def rwkv_time_mix(p: Dict[str, jax.Array], x: jax.Array, cfg: RWKVConfig,
+                  *, x_last: jax.Array = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence (train/prefill) pass.  x (B,S,d) → (y, final_state)."""
+    B, S, d = x.shape
+    H, hd = d // cfg.head_dim, cfg.head_dim
+    x_prev = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None],
+         x[:, :-1]], axis=1)
+    r, k, v, logw, g = _rkvwg(p, x, x_prev, H, hd)
+    u = p["u"].reshape(H, hd)
+    L = min(cfg.chunk_size, S)
+    while S % L:                 # largest divisor of S ≤ chunk_size
+        L -= 1
+    nc = S // L
+
+    def to32(a):
+        return a.astype(jnp.float32).reshape(B, nc, L, H, hd).transpose(1, 0, 2, 3, 4)
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    # checkpoint: see mamba2.py — avoids stacking per-chunk pairwise
+    # score residuals across the chunk scan in backward
+    @jax.checkpoint
+    def body(state, inp):
+        rc, kc, vc, wc = inp
+        o, state = _chunk_scan(rc, kc, vc, wc, u, state)
+        return state, o
+
+    state, os = lax.scan(body, state0, (to32(r), to32(k), to32(v), to32(logw)))
+    o = os.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    o = rms_norm(o, jnp.broadcast_to(p["ln_x"].reshape(H, hd) - 1.0, o.shape[-2:]))
+    y = (o.reshape(B, S, d).astype(x.dtype) * g) @ p["wo"].astype(x.dtype)
+    return y, state
+
+
+def init_rwkv_state(cfg: RWKVConfig, batch: int, d: int):
+    H, hd = d // cfg.head_dim, cfg.head_dim
+    return {"s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_last": jnp.zeros((batch, d), jnp.float32)}
+
+
+def rwkv_decode_step(p: Dict[str, jax.Array], x: jax.Array, state, cfg: RWKVConfig
+                     ) -> Tuple[jax.Array, dict]:
+    """One token.  x (B,1,d); state {s (B,H,hd,hd), x_last (B,d)}."""
+    B, one, d = x.shape
+    H, hd = d // cfg.head_dim, cfg.head_dim
+    x_prev = state["x_last"].astype(x.dtype)[:, None]
+    r, k, v, logw, g = _rkvwg(p, x, x_prev, H, hd)
+    r, k, v = (a.astype(jnp.float32)[:, 0] for a in (r, k, v))     # (B,H,hd)
+    w = jnp.exp(logw[:, 0])                                         # (B,H,hd)
+    u = p["u"].reshape(H, hd)
+    S0 = state["s"]
+    kv = jnp.einsum("bhc,bhv->bhcv", k, v)
+    o = jnp.einsum("bhc,bhcv->bhv", r, S0 + u[None, :, :, None] * kv)
+    s_new = w[..., None] * S0 + kv
+    o = rms_norm(o, jnp.broadcast_to(p["ln_x"].reshape(H, hd) - 1.0, (H, hd)))
+    y = (o.reshape(B, 1, d).astype(x.dtype) * g) @ p["wo"].astype(x.dtype)
+    return y, {"s": s_new, "x_last": x[:, 0].astype(jnp.float32)}

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (adamw_update, clip_by_global_norm,
+                               init_opt_state, make_schedule)

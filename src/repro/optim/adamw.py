@@ -1,0 +1,73 @@
+"""AdamW + LR schedules + global-norm clipping (pure JAX, no optax).
+
+Moments can be stored bf16 (``TrainConfig.optimizer_state_dtype``) — the
+memory knob for the giant configs (llama4-400b master+moments dominate
+per-chip HBM; see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import TrainConfig
+
+
+def init_opt_state(params, cfg: TrainConfig) -> Dict:
+    dt = jnp.dtype(cfg.optimizer_state_dtype)
+    zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, state: Dict, params, cfg: TrainConfig,
+                 lr: jax.Array) -> Tuple[Dict, Dict]:
+    """Returns (new_params, new_state).  Decoupled weight decay."""
+    c = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    # flatten (param trees may contain tuples — can't use tuple-is_leaf tricks)
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state["m"])
+    v_leaves = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    unf = lambda i: jax.tree.unflatten(treedef, [o[i] for o in out])
+    return unf(0), {"m": unf(1), "v": unf(2), "count": c}
+
+
+def make_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = cfg.learning_rate * s / max(cfg.warmup_steps, 1)
+        if cfg.schedule == "cosine":
+            t = jnp.clip((s - cfg.warmup_steps)
+                         / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+            rest = cfg.learning_rate * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        else:
+            t = jnp.clip((s - cfg.warmup_steps)
+                         / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+            rest = cfg.learning_rate * (1 - t)
+        return jnp.where(s < cfg.warmup_steps, warm, rest)
+    return sched

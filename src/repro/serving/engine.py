@@ -1,0 +1,66 @@
+"""Serving: prefill + batched single-token decode steps.
+
+``serve_step`` is what the decode dry-run shapes lower: ONE new token per
+sequence against a KV/state cache of ``seq_len`` (decode_32k) or the
+bounded ring/recurrent state (long_500k).  ``generate`` is the host-side
+loop used by the examples and integration tests (greedy or temperature
+sampling).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import ModelConfig
+from repro.models import transformer as T
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, *, cache_len: int,
+                      long_context: bool = False):
+    def prefill(params, tokens):
+        B = tokens.shape[0]
+        caches = T.init_caches(cfg, B, cache_len, long_context=long_context,
+                               dtype=jnp.dtype(cfg.dtype))
+        h, _, caches = T.forward(params, tokens, cfg, mesh=mesh,
+                                 caches=caches, collect_caches=True,
+                                 long_context=long_context)
+        logits = T.logits_from_hidden(params, cfg, h[:, -1:], mesh)
+        return logits, caches
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, *, long_context: bool = False):
+    def serve_step(params, token, caches):
+        return T.decode_step(params, token, caches, cfg, mesh=mesh,
+                             long_context=long_context)
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
+             mesh=None, cache_len: Optional[int] = None,
+             temperature: float = 0.0, rng: Optional[jax.Array] = None,
+             long_context: bool = False) -> jax.Array:
+    """Greedy/temperature generation.  prompt (B, S) → (B, S+steps)."""
+    assert cfg.has_decode, f"{cfg.name} is encoder-only"
+    B, S = prompt.shape[:2]
+    cache_len = cache_len or (S + steps)
+    prefill = jax.jit(make_prefill_step(cfg, mesh, cache_len=cache_len,
+                                        long_context=long_context))
+    step = jax.jit(make_serve_step(cfg, mesh, long_context=long_context))
+    logits, caches = prefill(params, prompt)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    out = [prompt]
+    tok = None
+    for i in range(steps):
+        if temperature > 0:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, logits[:, -1] / temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok)
+        if i + 1 < steps:
+            logits, caches = step(params, tok, caches)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,111 @@
+"""Continuous-batching serving scheduler (slot-based).
+
+The decode dry-run shapes assume a full static batch; a real server
+receives ragged requests.  This scheduler keeps a fixed-size slot pool
+over ONE compiled ``serve_step`` (static shapes — no retraces): arriving
+requests claim free slots via per-slot prefill into the shared batched
+cache; finished/evicted slots are refilled mid-flight.  Per-slot cache
+insertion uses a batched dynamic-update along the batch axis, so the hot
+decode loop never recompiles.
+
+CPU-scale but structurally the production pattern (vLLM-style slots
+without paging — the ring/linear caches are contiguous per slot).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import transformer as T
+from repro.serving.engine import make_serve_step
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: jnp.ndarray              # (S,) int32
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class SlotServer:
+    """Fixed-slot continuous batching over one compiled serve_step."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int,
+                 cache_len: int, mesh=None, eos_id: Optional[int] = None):
+        assert cfg.has_decode and cfg.frontend is None
+        self.cfg, self.params, self.mesh = cfg, params, mesh
+        self.slots = slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.caches = T.init_caches(cfg, slots, cache_len,
+                                    dtype=jnp.dtype(cfg.dtype))
+        self.active: Dict[int, Request] = {}          # slot → request
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._step = jax.jit(make_serve_step(cfg, mesh))
+        # per-slot prefill: full-batch forward on a (1, S) prompt, then
+        # scatter its caches into slot i of the batched cache tree
+        self._prefill = jax.jit(self._prefill_impl, static_argnums=(2,))
+
+    def _prefill_impl(self, prompt, caches, slot):
+        sub = T.init_caches(self.cfg, 1, self.cache_len,
+                            dtype=jnp.dtype(self.cfg.dtype))
+        h, _, sub = T.forward(self.params, prompt, self.cfg, mesh=self.mesh,
+                              caches=sub, collect_caches=True)
+        logits = T.logits_from_hidden(self.params, self.cfg, h[:, -1:],
+                                      self.mesh)
+
+        def put(full, one):
+            if one.ndim >= 2 and one.shape[1] == 1:     # (NSB, 1, ...) batch
+                return jax.lax.dynamic_update_slice(
+                    full, one.astype(full.dtype),
+                    (0, slot) + (0,) * (full.ndim - 2))
+            return one.astype(full.dtype)               # scalars (pos)
+
+        return jnp.argmax(logits[0, -1]), jax.tree.map(put, caches, sub)
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Claim a free slot; False if the pool is full."""
+        for s in range(self.slots):
+            if s not in self.active:
+                tok, self.caches = self._prefill(req.prompt[None, :],
+                                                 self.caches, s)
+                self.tokens = self.tokens.at[s, 0].set(tok)
+                req.out.append(int(tok))
+                self.active[s] = req
+                return True
+        return False
+
+    def step(self) -> List[Request]:
+        """One batched decode step for every active slot; returns newly
+        finished requests (their slots are freed)."""
+        if not self.active:
+            return []
+        logits, self.caches = self._step(self.params, self.tokens, self.caches)
+        self.tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        finished = []
+        for s, req in list(self.active.items()):
+            tok = int(self.tokens[s, 0])
+            req.out.append(tok)
+            if len(req.out) >= req.max_new or (self.eos_id is not None
+                                               and tok == self.eos_id):
+                req.done = True
+                finished.append(req)
+                del self.active[s]
+        return finished
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Drive a request list to completion with continuous refill."""
+        pending = list(requests)
+        done: List[Request] = []
+        while pending or self.active:
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            done += self.step()
+        return done

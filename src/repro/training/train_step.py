@@ -1,0 +1,128 @@
+"""Train step: chunked CE loss, gradient accumulation, clipping, AdamW.
+
+Chunked cross-entropy: the unembed + softmax-CE is scanned over sequence
+chunks so the full (B, S, V) logits tensor is NEVER materialized — at
+gemma2's V=256k that tensor is ~2 GB/device f32 on train_4k; chunking
+caps it at (B, S/nc, V).  This is a beyond-paper memory optimization
+recorded in EXPERIMENTS.md §Perf.
+
+Gradient accumulation: ``lax.scan`` over microbatches (the standard
+jax idiom — one compiled step regardless of accumulation factor).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import ModelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.optim import adamw_update, clip_by_global_norm, init_opt_state, make_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Dict
+    step: jax.Array
+
+
+def init_train_state(rng: jax.Array, cfg: ModelConfig,
+                     tcfg: TrainConfig) -> TrainState:
+    params = T.init_model(rng, cfg)
+    return TrainState(params, init_opt_state(params, tcfg),
+                      jnp.zeros((), jnp.int32))
+
+
+def _auto_chunks(S: int, V: int) -> int:
+    """Pick the CE chunk count so one chunk's logits stay ~2^25 elements
+    per batch row (≈ 128 MB/device at B_local≈16, f32) — the memory knob
+    that keeps gemma2 (V=256k) and internvl2 (V=92k) under HBM."""
+    target_tokens = max(16, 2 ** 25 // max(V, 1))
+    nc = 1
+    while S % (nc * 2) == 0 and S // nc > target_tokens and nc < 64:
+        nc *= 2
+    return nc
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, h: jax.Array, targets: jax.Array,
+                    mask: jax.Array, mesh=None, num_chunks: Optional[int] = None):
+    """Scan the unembed+CE over sequence chunks.  h (B,S,d) → scalar."""
+    B, S, d = h.shape
+    nc = num_chunks or _auto_chunks(S, cfg.vocab_size)
+    while S % nc:
+        nc -= 1
+    hc = h.reshape(B, nc, S // nc, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, S // nc).transpose(1, 0, 2)
+    mc = mask.reshape(B, nc, S // nc).transpose(1, 0, 2)
+
+    # remat the chunk body: without it, scan's VJP stacks every chunk's
+    # exp(logits) residual — i.e. the full (S, V) f32 tensor the chunking
+    # was supposed to avoid (22.6 GiB/dev for internvl2 train_4k).
+    @jax.checkpoint
+    def body(acc, xs):
+        hi, ti, mi = xs
+        logits = T.logits_from_hidden(params, cfg, hi, mesh).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mi)), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), jnp.float32),) * 2,
+                             (hc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    """Returns train_step(state, batch, rng) → (state, metrics).
+
+    ``batch`` holds the GLOBAL batch; with ``tcfg.microbatches > 1`` it is
+    split on the batch axis and accumulated via scan.
+    """
+    sched = make_schedule(tcfg)
+
+    def loss_fn(params, mb, rng):
+        h, aux, _ = T.forward(params, mb["inputs"], cfg, mesh=mesh, rng=rng,
+                              remat=tcfg.remat)
+        ce = chunked_ce_loss(params, cfg, h, mb["targets"], mb["loss_mask"],
+                             mesh)
+        return ce + aux, (ce, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch, rng) -> Tuple[TrainState, Dict]:
+        mbs = tcfg.microbatches
+
+        if mbs == 1:
+            (loss, (ce, aux)), grads = grad_fn(state.params, batch, rng)
+        else:
+            def split(x):
+                return x.reshape(mbs, x.shape[0] // mbs, *x.shape[1:])
+            mb_batch = jax.tree.map(split, batch)
+            rngs = jax.random.split(rng, mbs)
+
+            def body(acc, xs):
+                mb, r = xs
+                (l, (c, a)), g = grad_fn(state.params, mb, r)
+                gacc, lacc, cacc, aacc = acc
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + l, cacc + c, aacc + a), None
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, loss, ce, aux), _ = lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(()), jnp.zeros(())),
+                (mb_batch, rngs))
+            grads = jax.tree.map(lambda g: g / mbs, grads)
+            loss, ce, aux = loss / mbs, ce / mbs, aux / mbs
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = sched(state.step)
+        new_params, new_opt = adamw_update(grads, state.opt, state.params,
+                                           tcfg, lr)
+        metrics = {"loss": loss, "ce": ce, "aux": aux,
+                   "grad_norm": gnorm, "lr": lr}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

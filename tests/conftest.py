@@ -1,0 +1,33 @@
+"""Test fixtures.  8 fake CPU devices — enough for the multi-device
+collective/EP tests while keeping compiles fast (NOT the 512-device
+production mesh, which only launch/dryrun.py requests)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+# Lock the backend to 8 devices NOW — importing repro.launch.dryrun later
+# overwrites XLA_FLAGS (its production 512-device setting), which must not
+# affect already-initialized test backends.
+assert len(jax.devices()) == 8, jax.devices()
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    from repro.launch.mesh import make_smoke_mesh
+    return make_smoke_mesh((1, 1))
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    from repro.launch.mesh import make_smoke_mesh
+    return make_smoke_mesh((2, 4))
+
+
+@pytest.fixture(scope="session")
+def mesh_model8():
+    from repro.launch.mesh import make_smoke_mesh
+    return make_smoke_mesh((8,), ("model",))

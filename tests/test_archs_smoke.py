@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family
+variants — one forward + one train step + one decode step on CPU,
+asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.config import TrainConfig
+from repro.data import SyntheticLM
+from repro.models import transformer as T
+from repro.training import make_train_step
+from repro.training.train_step import init_train_state
+
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _inputs(cfg):
+    if cfg.frontend:
+        return jax.random.normal(RNG, (B, S, cfg.d_model), jnp.float32) * 0.02
+    return jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_forward_shapes_no_nan(arch, mesh1):
+    cfg = configs.smoke_config(arch)
+    p = T.init_model(RNG, cfg)
+    h, aux, _ = T.forward(p, _inputs(cfg), cfg, mesh=mesh1)
+    logits = T.logits_from_hidden(p, cfg, h, mesh1)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_one_train_step(arch, mesh1):
+    cfg = configs.smoke_config(arch)
+    tcfg = TrainConfig(total_steps=2, warmup_steps=1)
+    state = init_train_state(RNG, cfg, tcfg)
+    ds = SyntheticLM(cfg, batch=B, seq_len=S)
+    step = jax.jit(make_train_step(cfg, tcfg, mesh1))
+    state, m = step(state, ds.next_batch(0), RNG)
+    assert bool(jnp.isfinite(m["loss"])), (arch, m)
+    assert int(state.step) == 1
+    # params actually changed
+    before = init_train_state(RNG, cfg, tcfg).params["final_norm"]
+    assert float(jnp.max(jnp.abs(state.params["final_norm"] - before))) >= 0
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ASSIGNED
+                                  if configs.get_config(a).has_decode])
+def test_one_decode_step(arch, mesh1):
+    cfg = configs.smoke_config(arch)
+    p = T.init_model(RNG, cfg)
+    caches = T.init_caches(cfg, B, 32)
+    _, _, caches = T.forward(p, _inputs(cfg), cfg, mesh=mesh1, caches=caches,
+                             collect_caches=True)
+    tok = (jax.random.randint(RNG, (B, 1), 0, cfg.vocab_size)
+           if cfg.frontend is None else
+           jax.random.normal(RNG, (B, 1, cfg.d_model), jnp.float32) * 0.02)
+    lg, caches = T.decode_step(p, tok, caches, cfg, mesh=mesh1)
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+
+
+def test_encoder_only_has_no_decode():
+    cfg = configs.get_config("hubert-xlarge")
+    assert not cfg.has_decode
+
+
+def test_long_context_eligibility_matrix():
+    """DESIGN.md §skips: exactly these archs run long_500k."""
+    from repro.launch.dryrun import eligible
+    runs = {a for a in configs.ASSIGNED if eligible(a, "long_500k") is None}
+    assert runs == {"rwkv6-1.6b", "h2o-danube-3-4b", "zamba2-7b", "gemma2-9b"}
+    # and decode_32k skips exactly the encoder-only arch
+    runs32 = {a for a in configs.ASSIGNED if eligible(a, "decode_32k") is None}
+    assert configs.ASSIGNED and runs32 == set(configs.ASSIGNED) - {"hubert-xlarge"}
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_exact_config_matches_assignment(arch):
+    """The full configs carry the exact assigned dimensions."""
+    expect = {
+        "rwkv6-1.6b": (24, 2048, 7168, 65536),
+        "h2o-danube-3-4b": (24, 3840, 10240, 32000),
+        "yi-6b": (32, 4096, 11008, 64000),
+        "llama4-maverick-400b-a17b": (48, 5120, 8192, 202048),
+        "dbrx-132b": (40, 6144, 10752, 100352),
+        "internvl2-2b": (24, 2048, 8192, 92553),
+        "zamba2-7b": (81, 3584, 14336, 32000),
+        "gemma2-9b": (42, 3584, 14336, 256000),
+        "hubert-xlarge": (48, 1280, 5120, 504),
+        "starcoder2-3b": (30, 3072, 12288, 49152),
+    }[arch]
+    cfg = configs.get_config(arch)
+    assert (cfg.num_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == expect
+    if arch == "llama4-maverick-400b-a17b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 1
+    if arch == "dbrx-132b":
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 4
+    if arch == "zamba2-7b":
+        assert cfg.ssm.d_state == 64

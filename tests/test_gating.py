@@ -1,0 +1,148 @@
+"""Unit + property tests for the 8 gating strategies (paper Fig. 2)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gating
+from repro.core.config import MoEConfig
+
+RNG = jax.random.PRNGKey(0)
+
+ALL_GATES = [
+    ("topk", dict(top_k=2)),
+    ("switch", {}),
+    ("gshard", {}),
+    ("ktop1", dict(num_prototypes=2)),
+    ("sam", dict(num_groups=4, top_k=2)),
+    ("base", {}),
+    ("hash", {}),
+    ("dense_to_sparse", dict(top_k=2)),
+]
+
+
+@pytest.mark.parametrize("gate,kw", ALL_GATES)
+def test_gate_contract(gate, kw):
+    """Every strategy: static shapes, indices in range, finite weights,
+    probs a distribution."""
+    S, E = 64, 8
+    cfg = MoEConfig(num_experts=E, gate=gate, **kw)
+    logits = jax.random.normal(RNG, (S, E))
+    out = gating.route(cfg, logits, rng=RNG, token_ids=jnp.arange(S))
+    k = gating.gate_k(cfg)
+    assert out.expert_index.shape == (S, k)
+    assert out.combine_weights.shape == (S, k)
+    assert bool(jnp.all((out.expert_index >= 0) & (out.expert_index < E)))
+    assert bool(jnp.all(jnp.isfinite(out.combine_weights)))
+    assert bool(jnp.all(out.combine_weights >= 0))
+    np.testing.assert_allclose(np.sum(np.asarray(out.router_probs), -1),
+                               1.0, rtol=1e-4)
+
+
+@hypothesis.given(S=st.integers(4, 200), E=st.sampled_from([2, 4, 8, 64]),
+                  k=st.integers(1, 4), seed=st.integers(0, 2**30))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_topk_matches_lax(S, E, k, seed):
+    k = min(k, E)
+    cfg = MoEConfig(num_experts=E, gate="topk", top_k=k)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (S, E))
+    out = gating.route(cfg, logits)
+    vals, idx = jax.lax.top_k(logits, k)
+    np.testing.assert_array_equal(np.asarray(out.expert_index), np.asarray(idx))
+    np.testing.assert_allclose(np.asarray(out.combine_weights),
+                               np.asarray(jax.nn.softmax(vals, -1)), rtol=1e-5)
+
+
+def test_switch_is_top1_of_softmax():
+    cfg = MoEConfig(num_experts=8, gate="switch")
+    logits = jax.random.normal(RNG, (32, 8))
+    out = gating.route(cfg, logits)
+    probs = jax.nn.softmax(logits, -1)
+    np.testing.assert_array_equal(np.asarray(out.expert_index[:, 0]),
+                                  np.asarray(jnp.argmax(probs, -1)))
+    np.testing.assert_allclose(np.asarray(out.combine_weights[:, 0]),
+                               np.asarray(jnp.max(probs, -1)), rtol=1e-5)
+
+
+def test_gshard_weights_normalized_and_distinct():
+    cfg = MoEConfig(num_experts=8, gate="gshard")
+    logits = jax.random.normal(RNG, (64, 8))
+    out = gating.route(cfg, logits, rng=RNG)
+    assert bool(jnp.all(out.expert_index[:, 0] != out.expert_index[:, 1]))
+    np.testing.assert_allclose(np.sum(np.asarray(out.combine_weights), -1),
+                               1.0, rtol=1e-4)
+
+
+def test_ktop1_one_expert_per_prototype():
+    P = 4
+    cfg = MoEConfig(num_experts=16, gate="ktop1", num_prototypes=P)
+    logits = jax.random.normal(RNG, (64, 16))
+    out = gating.route(cfg, logits)
+    per = 16 // P
+    proto = np.asarray(out.expert_index) // per
+    np.testing.assert_array_equal(proto, np.tile(np.arange(P), (64, 1)))
+
+
+def test_sam_experts_within_one_group():
+    G = 4
+    cfg = MoEConfig(num_experts=16, gate="sam", num_groups=G, top_k=2)
+    logits = jax.random.normal(RNG, (64, 16))
+    out = gating.route(cfg, logits)
+    per = 16 // G
+    groups = np.asarray(out.expert_index) // per
+    # both selected experts come from the SAME group (the SAM constraint
+    # that avoids cross-device activation)
+    assert (groups[:, 0] == groups[:, 1]).all()
+
+
+def test_base_is_balanced():
+    """Sinkhorn-BASE: loads far more balanced than greedy argmax."""
+    S, E = 256, 8
+    cfg = MoEConfig(num_experts=E, gate="base")
+    # skewed logits: greedy would send everything to expert 0
+    logits = jax.random.normal(RNG, (S, E)) + \
+        jnp.array([3.0] + [0.0] * (E - 1))[None, :]
+    out = gating.route(cfg, logits)
+    counts = np.bincount(np.asarray(out.expert_index[:, 0]), minlength=E)
+    greedy = np.bincount(np.asarray(jnp.argmax(logits, -1)), minlength=E)
+    assert counts.max() < greedy.max()
+    assert counts.max() <= S / E * 1.8, counts   # near-balanced
+
+
+def test_hash_deterministic_and_id_based():
+    cfg = MoEConfig(num_experts=8, gate="hash")
+    ids = jnp.array([5, 5, 7, 5, 1])
+    logits = jax.random.normal(RNG, (5, 8))
+    a = gating.route(cfg, logits, token_ids=ids)
+    b = gating.route(cfg, -logits, token_ids=ids)     # logits irrelevant
+    np.testing.assert_array_equal(np.asarray(a.expert_index),
+                                  np.asarray(b.expert_index))
+    assert a.expert_index[0, 0] == a.expert_index[1, 0] == a.expert_index[3, 0]
+
+
+def test_dense_to_sparse_annealing():
+    """High T → near-uniform slot weights; low T → mass on slot 0."""
+    E = 8
+    logits = jax.random.normal(RNG, (128, E))
+    hot = gating.route(MoEConfig(num_experts=E, gate="dense_to_sparse",
+                                 top_k=4, gumbel_temperature=50.0), logits)
+    cold = gating.route(MoEConfig(num_experts=E, gate="dense_to_sparse",
+                                  top_k=4, gumbel_temperature=0.05), logits)
+    spread_hot = float(jnp.mean(hot.combine_weights[:, 0]
+                                - hot.combine_weights[:, -1]))
+    mass_cold = float(jnp.mean(cold.combine_weights[:, 0]))
+    assert spread_hot < 0.1          # dense phase: slots nearly equal
+    assert mass_cold > 0.95          # sparse phase: collapsed to top-1
+
+
+def test_aux_loss_uniform_is_one():
+    from repro.core import balance
+    S, E = 512, 8
+    cfg = MoEConfig(num_experts=E, gate="switch")
+    # uniform router → aux loss == 1 (its minimum)
+    logits = jnp.zeros((S, E)) + jax.random.normal(RNG, (S, E)) * 1e-4
+    out = gating.route(cfg, logits)
+    lb = float(balance.load_balance_loss(out))
+    assert abs(lb - 1.0) < 0.15

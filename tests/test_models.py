@@ -1,0 +1,136 @@
+"""Sequence mixers: chunked-train ≡ step-recurrence; attention variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import AttentionConfig, RWKVConfig, SSMConfig
+from repro.models import attention as A
+from repro.models import mamba2, rwkv6
+
+RNG = jax.random.PRNGKey(4)
+
+
+def test_rwkv6_chunked_equals_recurrent():
+    cfg = RWKVConfig(head_dim=8, chunk_size=4, decay_lora=8, mix_lora=4)
+    d, B, S = 16, 2, 16
+    p = rwkv6.init_rwkv_block(RNG, cfg, d)
+    x = jax.random.normal(RNG, (B, S, d), jnp.float32) * 0.5
+    y_chunk, st_chunk = rwkv6.rwkv_time_mix(p, x, cfg)
+    st = rwkv6.init_rwkv_state(cfg, B, d)
+    ys = []
+    for t in range(S):
+        y, st = rwkv6.rwkv_decode_step(p, x[:, t:t + 1], st, cfg)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_dec),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(st["s"]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_mamba2_chunked_equals_recurrent():
+    cfg = SSMConfig(d_state=8, head_dim=8, expand=2, chunk_size=4,
+                    conv_width=4, n_groups=1)
+    d, B, S = 16, 2, 16
+    p = mamba2.init_mamba_block(RNG, cfg, d)
+    x = jax.random.normal(RNG, (B, S, d), jnp.float32) * 0.5
+    y_chunk, st_chunk = mamba2.mamba_forward(p, x, cfg, d)
+    st = mamba2.init_mamba_state(cfg, B, d)
+    ys = []
+    for t in range(S):
+        y, st = mamba2.mamba_decode_step(p, x[:, t:t + 1], st, cfg, d)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_dec),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk["s"]), np.asarray(st["s"]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def _mk_attn(kv=2, window=None, cap=None, rope=True):
+    return AttentionConfig(num_heads=4, num_kv_heads=kv, head_dim=8,
+                           window=window, attn_softcap=cap, use_rope=rope)
+
+
+def test_attention_decode_matches_full():
+    """Teacher-forced decode reproduces the full causal pass."""
+    cfg = _mk_attn()
+    d, B, S = 32, 2, 12
+    p = A.init_attention(RNG, cfg, d)
+    x = jax.random.normal(RNG, (B, S, d), jnp.float32)
+    y_full, _ = A.full_attention(p, x, cfg, positions=jnp.arange(S))
+    cache = A.init_cache(cfg, B, S, d, jnp.float32)
+    ys = []
+    for t in range(S):
+        y, cache = A.decode_attention(p, x[:, t:t + 1], cache, cfg)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ring_cache_matches_full_swa():
+    """Ring decode with W-bounded cache ≡ full sliding-window attention."""
+    W = 4
+    cfg = _mk_attn(window=W)
+    d, B, S = 32, 2, 16
+    p = A.init_attention(RNG, cfg, d)
+    x = jax.random.normal(RNG, (B, S, d), jnp.float32)
+    y_full, _ = A.full_attention(p, x, cfg, positions=jnp.arange(S))
+    cache = A.init_cache(cfg, B, W, d, jnp.float32)   # bounded!
+    ys = []
+    for t in range(S):
+        y, cache = A.decode_attention(p, x[:, t:t + 1], cache, cfg, ring=True)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ring_prefill_then_decode_continues():
+    """Over-long prefill into a ring cache, then decode — matches full."""
+    W = 4
+    cfg = _mk_attn(window=W)
+    d, B, S = 32, 1, 11
+    p = A.init_attention(RNG, cfg, d)
+    x = jax.random.normal(RNG, (B, S + 1, d), jnp.float32)
+    y_full, _ = A.full_attention(p, x, cfg, positions=jnp.arange(S + 1))
+    _, kv = A.full_attention(p, x[:, :S], cfg, positions=jnp.arange(S))
+    cache = A.fill_cache(A.init_cache(cfg, B, W, d, jnp.float32), kv, ring=True)
+    y, _ = A.decode_attention(p, x[:, S:S + 1], cache, cfg, ring=True)
+    np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(y_full[:, S]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_q_chunked_equals_unchunked():
+    cfg = _mk_attn()
+    d, B, S = 32, 2, 16
+    p = A.init_attention(RNG, cfg, d)
+    x = jax.random.normal(RNG, (B, S, d), jnp.float32)
+    y1, _ = A.full_attention(p, x, cfg, positions=jnp.arange(S), q_chunk=4)
+    y2, _ = A.full_attention(p, x, cfg, positions=jnp.arange(S), q_chunk=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_softcap_bounds_scores():
+    cfg = _mk_attn(cap=5.0)
+    d, B, S = 32, 1, 8
+    p = A.init_attention(RNG, cfg, d)
+    x = jax.random.normal(RNG, (B, S, d), jnp.float32) * 10
+    y, _ = A.full_attention(p, x, cfg, positions=jnp.arange(S))
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_encoder_mode_is_bidirectional():
+    cfg = AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=8,
+                          use_rope=False, causal=False)
+    d, B, S = 32, 1, 8
+    p = A.init_attention(RNG, cfg, d)
+    x = jax.random.normal(RNG, (B, S, d), jnp.float32)
+    y, _ = A.full_attention(p, x, cfg, positions=jnp.arange(S), causal=False)
+    # position 0's output depends on position S-1's input (bidirectional)
+    x2 = x.at[:, -1].add(1.0)
+    y2, _ = A.full_attention(p, x2, cfg, positions=jnp.arange(S), causal=False)
+    assert float(jnp.max(jnp.abs(y2[:, 0] - y[:, 0]))) > 1e-6
