@@ -46,16 +46,29 @@ def run(paper: bool = False):
                                         act="relu")
         return y
 
+    cfg_g = MoEConfig(num_experts=E, gate="switch", capacity_factor=1.25,
+                      dispatch="grouped")
+
+    @jax.jit
+    def full_grouped_fn(x):
+        y, aux, _ = moe.moe_block_local(cfg_g, params, x, num_experts=E,
+                                        act="relu")
+        return y
+
     t_gate = timeit(gate_fn, x)
     t_layout = max(timeit(layout_fn, x) - t_gate, 0.0)
     t_expert = timeit(expert_fn, buf0)
     t_full = timeit(full_fn, x)
+    t_grouped = timeit(full_grouped_fn, x)
     tot = max(t_full, 1e-9)
     emit(f"breakdown/gate/S{S}", t_gate, f"share={t_gate / tot:.1%}")
     emit(f"breakdown/layout/S{S}", t_layout, f"share={t_layout / tot:.1%}")
     emit(f"breakdown/expert/S{S}", t_expert, f"share={t_expert / tot:.1%}")
     emit(f"breakdown/full-layer/S{S}", t_full,
          "a2a excluded on 1 device; fig7 model covers it")
+    emit(f"breakdown/full-layer-grouped/S{S}", t_grouped,
+         f"dropless; sort_vs_grouped={t_full / t_grouped:.2f}x",
+         sort_vs_grouped=t_full / t_grouped)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,13 @@
 """Paper Fig. 4 — data layout transformation: HetuMoE's sort/scatter
-kernel path vs the dense one-hot einsum (DeepSpeed/GShard baseline).
+kernel path vs the dense one-hot einsum (DeepSpeed/GShard baseline),
+plus the Pallas layout kernel's blocked tiling vs the seed's
+row-per-step tiling.
 
 The dense path does O(S·E·C·d) MACs; the sort path does O(S·K log) index
 work + O(S·K·d) data movement — the asymptotic gap the paper's >26%
-kernel win comes from.
+kernel win comes from.  Within the sort path, the blocked kernel moves
+``block_m`` rows per grid step off one scalar-prefetched index slab
+instead of one (1, d) DMA per step.
 """
 import jax
 import jax.numpy as jnp
@@ -11,6 +15,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit
 from repro.core import capacity, gating, layout
 from repro.core.config import MoEConfig
+from repro.kernels.layout_transform import gather_rows, gather_rows_rowstep
 
 
 def run(paper: bool = False):
@@ -40,9 +45,26 @@ def run(paper: bool = False):
         t_s = timeit(sort_path, x, logits)
         t_d = timeit(dense_path, x, logits)
         emit(f"layout/sort/S{S}/E{E}/d{d}", t_s,
-             f"speedup_vs_dense={t_d / t_s:.2f}x")
+             f"speedup_vs_dense={t_d / t_s:.2f}x",
+             speedup_vs_dense=t_d / t_s)
         emit(f"layout/dense/S{S}/E{E}/d{d}", t_d,
              f"flops_ratio=O(S*E*C*d)/O(S*K*d)={E * C // max(S // S, 1) // 1}C-vs-K")
+
+        if S == sizes[0]:
+            # kernel tiling comparison on the acceptance config (16e,
+            # S=1024 off --paper): blocked vs the seed's row-per-step.
+            # Row-per-step is O(grid)=E·C steps and brutally slow in
+            # interpret mode too, so only the smallest size times it.
+            g = gating.route(cfg, logits)
+            plan = layout.plan_sort(g, E, C)
+            inv = plan.inv
+            t_blk = timeit(lambda: gather_rows(x, inv, True))
+            t_row = timeit(lambda: gather_rows_rowstep(x, inv, interpret=True))
+            emit(f"layout/kernel-blocked/S{S}/E{E}/d{d}", t_blk,
+                 f"speedup_vs_rowstep={t_row / t_blk:.2f}x",
+                 speedup_vs_rowstep=t_row / t_blk)
+            emit(f"layout/kernel-rowstep/S{S}/E{E}/d{d}", t_row,
+                 "seed tiling: one (1,d) DMA per grid step")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,10 @@ import time
 
 import jax
 
+# Every emit() also lands here so run.py can write the machine-readable
+# BENCH_moe.json (name → µs + numeric ratios) for cross-PR perf tracking.
+RESULTS = []
+
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time per call in microseconds (jit + block_until_ready)."""
@@ -25,5 +29,9 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = ""):
+def emit(name: str, us: float, derived: str = "", **ratios: float):
+    """Print one CSV line and record it; keyword args are numeric ratios
+    (e.g. ``speedup_vs_dense=2.1``) preserved as JSON fields."""
     print(f"{name},{us:.1f},{derived}")
+    RESULTS.append({"name": name, "us": us, "derived": derived,
+                    "ratios": {k: float(v) for k, v in ratios.items()}})

@@ -2,21 +2,54 @@
 
   PYTHONPATH=src python -m benchmarks.run [--paper] [--only topk,layout,...]
 
-Output: ``name,us_per_call,derived`` CSV lines.  8 fake CPU devices so
-the AllToAll paths execute; absolute µs are CPU-emulation numbers — the
-cross-variant RATIOS and the α–β model outputs are the deliverables
-(see EXPERIMENTS.md).  Roofline numbers come from launch/dryrun.py, not
-from here.
+Output: ``name,us_per_call,derived`` CSV lines on stdout PLUS a
+machine-readable ``BENCH_moe.json`` at the repo root (name → µs +
+numeric ratios) so the perf trajectory is trackable across PRs without
+parsing stdout.  8 fake CPU devices so the AllToAll paths execute;
+absolute µs are CPU-emulation numbers — the cross-variant RATIOS and
+the α–β model outputs are the deliverables (see EXPERIMENTS.md).
+Roofline numbers come from launch/dryrun.py, not from here.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
 import sys  # noqa: E402
 
 FIGS = {"topk": "3", "layout": "4", "alltoall": "7", "breakdown": "1",
-        "overall": "8"}
+        "overall": "8", "grouped": "4+"}
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_moe.json"
+
+
+def write_json(wanted) -> None:
+    from benchmarks.common import RESULTS
+    # merge into any existing file: a partial --only run must refresh its
+    # own suites' entries (matched by the recorded "suite" field) without
+    # deleting the other suites' tracked numbers (ROADMAP tells future
+    # PRs to diff against this file).
+    suites, entries = [], {}
+    if JSON_PATH.exists():
+        try:
+            prev = json.loads(JSON_PATH.read_text())
+            suites = [s for s in prev.get("suites", []) if s not in wanted]
+            entries = {k: v for k, v in prev.get("entries", {}).items()
+                       if v.get("suite") not in wanted}
+        except (ValueError, OSError):
+            pass
+    for r in RESULTS:
+        entry = {"suite": r["suite"], "us": round(r["us"], 1)}
+        if r["derived"]:
+            entry["derived"] = r["derived"]
+        entry.update(r["ratios"])
+        entries[r["name"]] = entry
+    JSON_PATH.write_text(json.dumps(
+        {"suites": suites + list(wanted), "entries": entries},
+        indent=2) + "\n")
+    print(f"# wrote {JSON_PATH} ({len(entries)} entries)")
 
 
 def main() -> None:
@@ -24,19 +57,25 @@ def main() -> None:
     ap.add_argument("--paper", action="store_true",
                     help="paper-exact dims (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: topk,layout,alltoall,breakdown,overall")
+                    help="comma list: topk,layout,alltoall,breakdown,"
+                         "overall,grouped")
     args = ap.parse_args()
-    from benchmarks import (bench_alltoall, bench_breakdown, bench_layout,
-                            bench_overall, bench_topk)
+    from benchmarks import (bench_alltoall, bench_breakdown, bench_grouped,
+                            bench_layout, bench_overall, bench_topk)
     mods = {"topk": bench_topk, "layout": bench_layout,
             "alltoall": bench_alltoall, "breakdown": bench_breakdown,
-            "overall": bench_overall}
+            "overall": bench_overall, "grouped": bench_grouped}
     wanted = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")
+    from benchmarks.common import RESULTS
     for name in wanted:
         print(f"# --- {name} (paper fig {FIGS[name]}) ---")
         sys.stdout.flush()
+        start = len(RESULTS)
         mods[name].run(paper=args.paper)
+        for r in RESULTS[start:]:       # tag for the JSON merge
+            r["suite"] = name
+    write_json(wanted)
 
 
 if __name__ == '__main__':

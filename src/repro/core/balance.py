@@ -29,15 +29,25 @@ def router_z_loss(gate: GateOutput) -> jax.Array:
     return jnp.mean(jax.nn.logsumexp(gate.logits, axis=-1) ** 2)
 
 
-def aux_losses(cfg: MoEConfig, gate: GateOutput
+def aux_losses(cfg: MoEConfig, gate: GateOutput,
+               expert_counts: jax.Array | None = None,
                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Weighted aux-loss scalar + router metrics dict."""
+    """Weighted aux-loss scalar + router metrics dict.
+
+    ``expert_counts`` (E,) — per-expert assignment counts already derived
+    by the dispatch plan's single sort; passing them skips the O(S·K·E)
+    one-hot re-count here (sort-once: the plan is the source of truth for
+    load state).
+    """
     E = gate.router_probs.shape[-1]
     lb = load_balance_loss(gate)
     zl = router_z_loss(gate)
     loss = cfg.aux_loss_weight * lb + cfg.router_z_loss_weight * zl
-    counts = jnp.sum(
-        jax.nn.one_hot(gate.expert_index, E, dtype=jnp.float32), axis=(0, 1))
+    if expert_counts is not None:
+        counts = expert_counts.astype(jnp.float32)
+    else:
+        counts = jnp.sum(
+            jax.nn.one_hot(gate.expert_index, E, dtype=jnp.float32), axis=(0, 1))
     metrics = {
         "load_balance_loss": lb,
         "router_z_loss": zl,

@@ -1,0 +1,19 @@
+"""Version compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and renamed ``check_rep`` → ``check_vma``) across jax releases; the pinned
+jax 0.4.37 only has the experimental spelling.  Callers import it from here
+and always use the new-style ``check_vma`` keyword.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):          # jax ≥ 0.6 public API
+    shard_map = jax.shard_map
+else:                                  # jax 0.4.x experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -26,7 +26,12 @@ GATE_STRATEGIES = (
 )
 
 A2A_MODES = ("flat", "hierarchical")
-DISPATCH_MODES = ("sort", "dense")  # sort = HetuMoE layout-transform; dense = one-hot einsum baseline
+# sort    = HetuMoE layout-transform into the capacity-padded (E·C, d) buffer
+# dense   = one-hot einsum baseline (GShard/DeepSpeed)
+# grouped = dropless: expert-sorted (S·K, d) buffer + ragged/grouped expert
+#           matmuls (MegaBlocks-style); single-device path — falls back to
+#           "sort" under expert parallelism (model_size > 1)
+DISPATCH_MODES = ("sort", "dense", "grouped")
 
 
 @dataclass(frozen=True)
@@ -40,14 +45,17 @@ class MoEConfig:
     num_shared_experts: int = 0            # always-on experts (Llama4-style)
     num_prototypes: int = 1                # for ktop1 (M6)
     num_groups: int = 1                    # for sam hierarchical routing
-    dispatch: str = "sort"                 # "sort" (paper) | "dense" (baseline)
+    dispatch: str = "sort"                 # see DISPATCH_MODES above
     a2a: str = "flat"                      # "flat" | "hierarchical"
     a2a_inner: int = 4                     # inner group size for hierarchical a2a
     aux_loss_weight: float = 0.01
     router_z_loss_weight: float = 0.0
     router_dtype: str = "float32"
     gumbel_temperature: float = 1.0        # for dense_to_sparse
-    use_pallas_gate: bool = False          # route through kernels/topk_gate
+    # Use the Pallas kernel paths end to end: fused top-k gate, blocked
+    # layout transform, and (grouped mode) the grouped-matmul FFN.  Off,
+    # the equivalent jnp/ragged_dot implementations run instead.
+    use_pallas_gate: bool = False
 
     def __post_init__(self):
         assert self.gate in GATE_STRATEGIES, self.gate

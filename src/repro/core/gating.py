@@ -223,18 +223,19 @@ def gate_k(cfg: MoEConfig) -> int:
 
 def _route_pallas(cfg: MoEConfig, logits: jax.Array) -> GateOutput:
     """Fast path for topk/switch: the fused Pallas kernel does the top-k
-    SELECTION (integer indices — inherently non-differentiable); the
-    combine weights are then recomputed from the indices as differentiable
-    functions of the logits, so the router still trains."""
+    SELECTION (integer indices — inherently non-differentiable) and hands
+    back its single-pass softmax stats; the probabilities and combine
+    weights are derived from those stats (no second full softmax pass)
+    in a way that stays exactly differentiable in the logits, so the
+    router still trains — see ``ops.topk_softmax_weights``."""
     from repro.kernels import ops as kops  # lazy: kernels are optional
     k = gate_k(cfg)
-    _, idx, _, _ = kops.fused_topk(jax.lax.stop_gradient(logits), k)
-    probs = jax.nn.softmax(logits, axis=-1)
+    idx, sel_probs, probs = kops.topk_softmax_weights(logits, k)
     if cfg.gate == "topk":
         vals = jnp.take_along_axis(logits, idx, axis=-1)
         weights = jax.nn.softmax(vals, axis=-1)
     else:  # switch
-        weights = jnp.take_along_axis(probs, idx, axis=-1)
+        weights = sel_probs
     return GateOutput(idx, weights, probs, logits)
 
 

@@ -1,26 +1,49 @@
 """Data layout transform (paper §3.2, Fig. 4) — and its inverse.
 
 After the gate decides token→expert, tokens bound for the same expert
-must land in physically-contiguous memory before the AllToAll.  Two
-interchangeable implementations produce bit-identical ``(E·C, d)``
-buffers under the same priority rule (position-in-batch, slot-major):
+must land in physically-contiguous memory before the AllToAll.  Three
+dispatch modes, selected by ``MoEConfig.dispatch``:
 
-``sort``    HetuMoE's approach — a stable sort over expert ids yields the
-            position-within-expert, then a scatter packs the buffer.  On
-            TPU the scatter is the Pallas ``layout_transform`` kernel
-            (kernels/layout_transform.py); this module is the pure-jnp
-            path the kernel is validated against.
+``sort``    HetuMoE's approach — ONE stable sort over expert ids yields
+            the position-within-expert; the plan carries the sort
+            permutation, per-expert counts, group offsets and the
+            buffer-side inverse row map so dispatch, combine, the Pallas
+            layout kernel and the aux-loss load metrics all reuse it
+            instead of re-deriving routing state.  Produces the
+            capacity-padded ``(E·C, d)`` buffer; tokens past capacity
+            drop.  Cost: O(S·K·log(S·K)) index work + O(E·C·d) movement.
 ``dense``   GShard/DeepSpeed baseline — position via cumsum of one-hots
-            and a (S·K, E·C) one-hot einsum.  O(S·E·C) FLOPs vs the sort
-            path's O(S·K·log(S·K)) + O(S·K·d) — the gap the paper's
-            layout kernel exploits.
+            and a (S·K, E·C) one-hot einsum.  O(S·E·C·d) FLOPs — the gap
+            the paper's layout kernel exploits.
+``grouped`` MegaBlocks-style dropless mode — the same single sort packs
+            tokens into a contiguous ``(S·K, d)`` buffer with NO capacity
+            padding and NO drops; the expert FFN runs as grouped/ragged
+            matmuls over the per-expert segments (``lax.ragged_dot`` or
+            the Pallas grouped kernel, kernels/grouped_ffn.py).  Cost:
+            O(S·K·log(S·K)) + O(S·K·d) movement + exactly Σ_e n_e FFN
+            rows — no padding FLOPs at low load, no drops at high load.
+            Single-device / data-parallel only for now (falls back to
+            ``sort`` under expert parallelism; grouped a2a is an open
+            roadmap item).
 
-Dropped tokens (position ≥ capacity) get ``slot = -1`` and weight 0: the
-residual connection carries them unchanged (Switch semantics).
+Cost model (per device, S tokens, K slots, E experts, capacity C):
+
+    ==========  ============================  =======================
+    mode        index work                    data movement / FLOPs
+    ==========  ============================  =======================
+    sort        1 stable sort (S·K)           E·C·d rows moved
+    dense       K cumsums over (S, E)         S·E·C·d MAC einsum
+    grouped     1 stable sort (S·K)           S·K·d rows moved,
+                                              Σ n_e ragged FFN rows
+    ==========  ============================  =======================
+
+For ``sort``/``dense``, dropped tokens (position ≥ capacity) get
+``slot = -1`` and weight 0: the residual connection carries them
+unchanged (Switch semantics).  ``grouped`` never drops.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,60 +54,158 @@ from repro.core.gating import GateOutput
 class DispatchPlan(NamedTuple):
     """Static-shape routing plan for S tokens × K slots.
 
-    ``slot``   (S, K) int32 — row in the (E·C, d) dispatch buffer, -1 dropped
-    ``weight`` (S, K) f32   — combine weight, zeroed for dropped slots
+    Token view (always present):
+      ``slot``    (S, K) int32 — row in the (E·C, d) dispatch buffer, -1 dropped
+      ``weight``  (S, K) f32   — combine weight, zeroed for dropped slots
+
+    Sort-once state (from :func:`plan_sort`; ``None`` on the cumsum path):
+      ``sort_order``  (S·K,)  int32 — stable argsort of k-major expert ids
+      ``counts``      (E,)    int32 — per-expert assignment counts (pre-capacity)
+      ``offsets``     (E+1,)  int32 — exclusive prefix sum of ``counts``
+      ``inv``         (E·C,)  int32 — buffer row → source token row, -1 empty
     """
     slot: jax.Array
     weight: jax.Array
+    sort_order: Optional[jax.Array] = None
+    counts: Optional[jax.Array] = None
+    offsets: Optional[jax.Array] = None
+    inv: Optional[jax.Array] = None
+
+
+class GroupedPlan(NamedTuple):
+    """Dropless routing plan: S·K assignment rows sorted by expert.
+
+    ``sort_order`` (S·K,) int32 — k-major flat slot index per sorted row
+    ``token``      (S·K,) int32 — source token row per sorted row
+    ``weight``     (S·K,) f32   — combine weight per sorted row
+    ``counts``     (E,)   int32 — rows per expert (Σ ≤ S·K; the remainder
+                                  is the virtual drop bucket's tail)
+    ``offsets``    (E+1,) int32 — exclusive prefix sum of ``counts``
+    """
+    sort_order: jax.Array
+    token: jax.Array
+    weight: jax.Array
+    counts: jax.Array
+    offsets: jax.Array
+
+
+def _offsets(counts: jax.Array) -> jax.Array:
+    z = jnp.zeros((1,), counts.dtype)
+    return jnp.concatenate([z, jnp.cumsum(counts)])
+
+
+def _sort_by_expert(gate: GateOutput, n_buckets: int):
+    """THE one stable sort both sort-path and grouped planning share.
+
+    Returns ``(flat_e, order, sorted_e, counts)``: the k-major flattened
+    expert ids (slot-major priority — every token's 1st choice outranks
+    any 2nd choice), their stable argsort, the sorted ids, and the
+    per-bucket counts.  Any change to key or priority semantics here
+    changes every dispatch mode together.
+    """
+    S, K = gate.expert_index.shape
+    flat_e = gate.expert_index.T.reshape(K * S)        # k-major flatten
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(flat_e), flat_e, num_segments=n_buckets)
+    return flat_e, order, flat_e[order], counts
 
 
 # ---------------------------------------------------------------------------
 # plan construction — position-within-expert under capacity
 # ---------------------------------------------------------------------------
 
-def plan_sort(gate: GateOutput, num_experts: int, capacity: int) -> DispatchPlan:
-    """HetuMoE path: stable argsort over expert ids.
+def plan_sort(gate: GateOutput, num_experts: int, capacity: int,
+              drop_bucket: bool = False) -> DispatchPlan:
+    """HetuMoE path: ONE stable argsort over expert ids.
 
     The stable sort keyed on expert id orders each expert's tokens by
     flattened (slot, token) index — slot-major priority (GShard/Switch
     semantics: every token's 1st choice outranks any 2nd choice) — so the
-    first C stay, the rest drop.  Identical to :func:`plan_cumsum`.
+    first C stay, the rest drop.  Identical slots to :func:`plan_cumsum`.
+
+    ``drop_bucket``: routing may use a virtual expert id == num_experts
+    for padded tokens; it sorts last and is always dropped (its rows never
+    reach the buffer, the counts, or the inverse map).
+
+    Everything derived from the sort — permutation, per-expert counts,
+    group offsets, and the buffer-side inverse row map — rides along in
+    the plan so downstream consumers don't re-sort.
     """
     S, K = gate.expert_index.shape
-    flat_e = gate.expert_index.T.reshape(K * S)        # k-major flatten
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_e = flat_e[order]
-    counts = jax.ops.segment_sum(
-        jnp.ones_like(flat_e), flat_e, num_segments=num_experts)
+    E = num_experts
+    n_buckets = E + 1 if drop_bucket else E
+    flat_e, order, sorted_e, counts = _sort_by_expert(gate, n_buckets)
     starts = jnp.concatenate(
         [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
     pos_sorted = jnp.arange(K * S, dtype=flat_e.dtype) - starts[sorted_e]
+    keep_sorted = (pos_sorted < capacity) & (sorted_e < E)
+    # buffer-side inverse: buffer row e·C+p ← source token (sorted row's
+    # flat index mod S); the SAME sort the token-side slots come from.
+    dest = jnp.where(keep_sorted, sorted_e * capacity + pos_sorted,
+                     E * capacity)
+    inv = jnp.full((E * capacity,), -1, jnp.int32)
+    inv = inv.at[dest].set((order % S).astype(jnp.int32), mode="drop")
+    # token-side view
     pos = jnp.zeros_like(flat_e).at[order].set(pos_sorted)
-    keep = pos < capacity
+    keep = jnp.zeros((K * S,), bool).at[order].set(keep_sorted)
     slot = jnp.where(keep, flat_e * capacity + pos, -1).reshape(K, S).T
-    weight = jnp.where((pos < capacity).reshape(K, S).T,
-                       gate.combine_weights, 0.0)
-    return DispatchPlan(slot.astype(jnp.int32), weight)
+    weight = jnp.where(keep.reshape(K, S).T, gate.combine_weights, 0.0)
+    return DispatchPlan(slot.astype(jnp.int32), weight,
+                        sort_order=order.astype(jnp.int32),
+                        counts=counts[:E].astype(jnp.int32),
+                        offsets=_offsets(counts[:E]).astype(jnp.int32),
+                        inv=inv)
 
 
-def plan_cumsum(gate: GateOutput, num_experts: int, capacity: int) -> DispatchPlan:
+def plan_cumsum(gate: GateOutput, num_experts: int, capacity: int,
+                drop_bucket: bool = False) -> DispatchPlan:
     """GShard baseline path: position via running one-hot cumsums,
-    slot k accounting for all tokens of slots < k.  Identical output to
-    :func:`plan_sort` (asserted in tests)."""
+    slot k accounting for all tokens of slots < k.  Identical slots to
+    :func:`plan_sort` (asserted in tests); carries counts/offsets (from
+    the running totals) but no sort permutation."""
     S, K = gate.expert_index.shape
-    oh = jax.nn.one_hot(gate.expert_index, num_experts, dtype=jnp.int32)  # (S,K,E)
+    E = num_experts
+    n_buckets = E + 1 if drop_bucket else E
+    oh = jax.nn.one_hot(gate.expert_index, n_buckets, dtype=jnp.int32)  # (S,K,B)
     pos = jnp.zeros((S, K), jnp.int32)
-    running = jnp.zeros((num_experts,), jnp.int32)
+    running = jnp.zeros((n_buckets,), jnp.int32)
     for k in range(K):  # K is tiny (≤8) and static — unrolled
         csum = jnp.cumsum(oh[:, k, :], axis=0) - oh[:, k, :]      # excl. cumsum
         pos = pos.at[:, k].set(
             jnp.sum(oh[:, k, :] * (csum + running[None, :]), axis=-1))
         running = running + jnp.sum(oh[:, k, :], axis=0)
-    keep = pos < capacity
     flat_e = gate.expert_index
+    keep = (pos < capacity) & (flat_e < E)
     slot = jnp.where(keep, flat_e * capacity + pos, -1)
     weight = jnp.where(keep, gate.combine_weights, 0.0)
-    return DispatchPlan(slot.astype(jnp.int32), weight)
+    counts = running[:E]
+    return DispatchPlan(slot.astype(jnp.int32), weight,
+                        counts=counts,
+                        offsets=_offsets(counts))
+
+
+def plan_grouped(gate: GateOutput, num_experts: int,
+                 drop_bucket: bool = False) -> GroupedPlan:
+    """Dropless plan: the same single stable sort, no capacity truncation.
+
+    Virtual-bucket rows (``drop_bucket``, expert id == num_experts) sort
+    to the tail with weight 0 — they occupy buffer rows past
+    ``offsets[-1]`` which the grouped FFN never computes and the combine
+    never weights in.
+    """
+    S, K = gate.expert_index.shape
+    E = num_experts
+    n_buckets = E + 1 if drop_bucket else E
+    _, order, sorted_e, counts = _sort_by_expert(gate, n_buckets)
+    counts = counts[:E]
+    flat_w = gate.combine_weights.T.reshape(K * S)
+    weight = jnp.where(sorted_e < E, flat_w[order], 0.0)
+    return GroupedPlan(sort_order=order.astype(jnp.int32),
+                       token=(order % S).astype(jnp.int32),
+                       weight=weight,
+                       counts=counts.astype(jnp.int32),
+                       offsets=_offsets(counts).astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +214,16 @@ def plan_cumsum(gate: GateOutput, num_experts: int, capacity: int) -> DispatchPl
 
 def dispatch_scatter(tokens: jax.Array, plan: DispatchPlan,
                      num_experts: int, capacity: int) -> jax.Array:
-    """(S, d) → (E·C, d) via scatter (paper's layout-transform kernel)."""
+    """(S, d) → (E·C, d) (paper's layout-transform direction).
+
+    With sort-once state in the plan this is a pure gather off the
+    carried inverse row map (what the Pallas kernel executes on TPU);
+    plans without it (cumsum path) fall back to the token-side scatter.
+    """
+    if plan.inv is not None:
+        keep = plan.inv >= 0
+        safe = jnp.where(keep, plan.inv, 0)
+        return jnp.where(keep[:, None], tokens[safe], 0).astype(tokens.dtype)
     S, K = plan.slot.shape
     keep = plan.slot >= 0
     safe = jnp.where(keep, plan.slot, 0).reshape(S * K)
@@ -111,6 +241,19 @@ def combine_gather(expert_out: jax.Array, plan: DispatchPlan) -> jax.Array:
     gathered = expert_out[safe.reshape(S * K)].reshape(S, K, -1)
     w = (plan.weight * keep).astype(expert_out.dtype)
     return jnp.einsum("skd,sk->sd", gathered, w)
+
+
+def dispatch_grouped(tokens: jax.Array, plan: GroupedPlan) -> jax.Array:
+    """(S, d) → (S·K, d) expert-sorted buffer — no padding, no drops."""
+    return tokens[plan.token]
+
+
+def combine_grouped(expert_out: jax.Array, plan: GroupedPlan,
+                    num_tokens: int) -> jax.Array:
+    """(S·K, d) expert-sorted FFN output → (S, d) weighted combine."""
+    w = plan.weight.astype(expert_out.dtype)
+    out = jnp.zeros((num_tokens, expert_out.shape[-1]), expert_out.dtype)
+    return out.at[plan.token].add(expert_out * w[:, None])
 
 
 def dispatch_dense(tokens: jax.Array, plan: DispatchPlan,

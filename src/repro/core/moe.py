@@ -9,6 +9,11 @@ Per-device flow (inside ``shard_map``):
     5. AllToAll        return path (same mode)
     6. reverse xform   gather + weighted combine            [core/layout]
 
+``cfg.dispatch == "grouped"`` short-circuits 2–6 into the dropless path:
+expert-sorted (T·K, d) buffer + grouped/ragged expert matmuls, no
+capacity padding and no drops (single-device; falls back to ``sort``
+under expert parallelism — grouped a2a is a roadmap item).
+
 Tokens are sharded over EVERY mesh axis (the token axis is the product
 batch·seq flattened): each of the D·M devices routes its own T/(D·M)
 tokens.  Experts shard over ``model`` and replicate over ``data``/``pod``
@@ -31,6 +36,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import alltoall, balance, capacity, gating, layout
+from repro.core.compat import shard_map
 from repro.core.config import MoEConfig
 
 
@@ -105,23 +111,49 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
         gate = gate._replace(
             expert_index=jnp.where(valid[:, None], gate.expert_index, E),
             combine_weights=jnp.where(valid[:, None], gate.combine_weights, 0.0))
-    aux, metrics = balance.aux_losses(cfg, gate)
 
-    # -- 2. layout transform ------------------------------------------------
-    C = capacity.expert_capacity(cfg, T, E)
-    if cfg.dispatch == "sort":
-        plan = layout.plan_sort(gate, E + 1, C)       # +1 = virtual drop bucket
-        plan = plan._replace(slot=jnp.where(plan.slot >= E * C, -1, plan.slot))
-        buf = layout.dispatch_scatter(x, plan, E, C)
+    # -- 2. dispatch plan (ONE sort; aux metrics reuse its counts) ----------
+    dispatch = cfg.dispatch
+    if dispatch == "grouped" and (model_size > 1 or expert_tp_axis is not None):
+        dispatch = "sort"    # grouped expert-parallel a2a: roadmap item
+
+    if dispatch == "grouped":
+        # dropless: expert-sorted (T·K, d) buffer, no capacity, no drops;
+        # the expert FFN runs as grouped/ragged matmuls over the segments.
+        gplan = layout.plan_grouped(gate, E, drop_bucket=True)
+        aux, metrics = balance.aux_losses(cfg, gate,
+                                          expert_counts=gplan.counts)
+        from repro.kernels import grouped_ffn as gffn
+        from repro.kernels import ops as kops
         if cfg.use_pallas_gate:
-            # the Pallas layout kernel replaces the jnp scatter on TPU;
+            xs = kops.gather_rows(x, gplan.token)
+        else:
+            xs = layout.dispatch_grouped(x, gplan)
+        ys = gffn.grouped_ffn(params, xs.astype(params["w_up"].dtype),
+                              gplan.counts, act,
+                              use_pallas=cfg.use_pallas_gate,
+                              interpret=kops.INTERPRET)
+        y = layout.combine_grouped(ys, gplan, T)
+        if pmean_axes:
+            aux = lax.pmean(aux, pmean_axes)
+            metrics = {k: lax.pmean(v, pmean_axes) for k, v in metrics.items()}
+        return y.astype(x.dtype), aux, metrics
+
+    C = capacity.expert_capacity(cfg, T, E)
+    if dispatch == "sort":
+        plan = layout.plan_sort(gate, E, C, drop_bucket=True)
+        if cfg.use_pallas_gate:
+            # the blocked Pallas layout kernel replaces the jnp gather on
+            # TPU, driven by the plan's sort-derived inverse row map;
             # interpret-mode equivalence is asserted in tests
             from repro.kernels import ops as kops
-            buf = kops.layout_dispatch(x, plan.slot, E, C)
+            buf = kops.layout_dispatch(x, plan.slot, E, C, inv=plan.inv)
+        else:
+            buf = layout.dispatch_scatter(x, plan, E, C)
     else:
-        plan = layout.plan_cumsum(gate, E + 1, C)
-        plan = plan._replace(slot=jnp.where(plan.slot >= E * C, -1, plan.slot))
+        plan = layout.plan_cumsum(gate, E, C, drop_bucket=True)
         buf = layout.dispatch_dense(x, plan, E, C)
+    aux, metrics = balance.aux_losses(cfg, gate, expert_counts=plan.counts)
 
     # -- 3. AllToAll (dispatch) ---------------------------------------------
     if model_size > 1:
@@ -160,8 +192,12 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
         h = h.reshape(E * C, d)
 
     # -- 6. reverse layout transform + combine --------------------------------
-    if cfg.dispatch == "sort":
-        y = layout.combine_gather(h, plan)
+    if dispatch == "sort":
+        if cfg.use_pallas_gate:
+            from repro.kernels import ops as kops
+            y = kops.layout_combine(h, plan.slot, plan.weight)
+        else:
+            y = layout.combine_gather(h, plan)
     else:
         y = layout.combine_dense(h, plan, E, C)
 
@@ -239,7 +275,7 @@ def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
             pmean_axes=axis_names, rng=rng,
             token_ids=tid, valid=valid, expert_tp_axis=tp)
 
-    y, aux, metrics = jax.shard_map(
+    y, aux, metrics = shard_map(
         local_fn, mesh=mesh,
         in_specs=(param_specs, tok_spec, tok_spec, tok_spec, P()),
         out_specs=(tok_spec, P(), {k: P() for k in

@@ -1,0 +1,145 @@
+"""Grouped (ragged) expert matmuls for the dropless dispatch mode.
+
+The ``grouped`` dispatch packs tokens into an expert-sorted ``(M, d)``
+buffer whose per-expert segment lengths are data-dependent; the expert
+FFN then needs ``y[offs[e]:offs[e+1]] = x[offs[e]:offs[e+1]] @ w[e]`` —
+a grouped matmul (MegaBlocks' dMoE primitive).  Two implementations:
+
+``ragged``  ``jax.lax.ragged_dot`` — XLA's native ragged primitive, used
+            as the jnp reference path and for the VJP.
+``pallas``  Blocked kernel: grid ``(M/block_m, E)``; each row-block visits
+            each expert, but a ``pl.when`` predicate skips (expert,
+            block) pairs whose row ranges don't overlap — with sorted
+            rows a block overlaps ~1-2 experts, so the MXU work is
+            Σ_e ceil(n_e / block_m) tiles, not M/block_m · E.  The
+            group-offset vector is scalar-prefetched into SMEM and rows
+            outside the active expert's range are masked before the dot.
+
+Rows past ``offsets[-1]`` (the virtual drop bucket's tail under token
+padding) belong to no expert and come out zero — matching ragged_dot.
+
+The Pallas forward carries a ``custom_vjp`` whose backward delegates to
+``ragged_dot``'s differentiation rule, so the grouped mode trains.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_M = 128
+
+
+def _grouped_matmul_kernel(offs_ref, lhs_ref, rhs_ref, out_ref, *,
+                           block_m: int):
+    i, e = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row0 = i * block_m
+    lo, hi = offs_ref[e], offs_ref[e + 1]
+
+    @pl.when(jnp.logical_and(hi > row0, lo < row0 + block_m))
+    def _tile():
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_m, 1), 0)
+        mask = (rows >= lo) & (rows < hi)
+        x = jnp.where(mask, lhs_ref[...], 0)
+        # out_ref is f32 regardless of input dtype: partial sums must not
+        # round to bf16 (the sort path's einsum accumulates f32 too)
+        out_ref[...] += jnp.dot(x, rhs_ref[0],
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
+def _grouped_matmul_impl(lhs: jax.Array, rhs: jax.Array, offsets: jax.Array,
+                         *, interpret: bool = True,
+                         block_m: int = DEFAULT_BLOCK_M) -> jax.Array:
+    M, K = lhs.shape
+    E, _, N = rhs.shape
+    bm = min(block_m, M)
+    pad = (-M) % bm
+    if pad:
+        lhs = jnp.concatenate([lhs, jnp.zeros((pad, K), lhs.dtype)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=((M + pad) // bm, E),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, e, offs: (i, 0)),
+            pl.BlockSpec((1, K, N), lambda i, e, offs: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, N), lambda i, e, offs: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_grouped_matmul_kernel, block_m=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M + pad, N), jnp.float32),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), lhs, rhs)
+    return (out[:M] if pad else out).astype(lhs.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def grouped_matmul(lhs: jax.Array, rhs: jax.Array, group_sizes: jax.Array,
+                   interpret: bool = True,
+                   block_m: int = DEFAULT_BLOCK_M) -> jax.Array:
+    """y (M, N) with y[seg_e] = lhs[seg_e] @ rhs[e] per expert segment.
+
+    lhs (M, K) expert-sorted rows, rhs (E, K, N), group_sizes (E,).
+    Rows past sum(group_sizes) produce zeros.
+    """
+    return _grouped_fwd(lhs, rhs, group_sizes, interpret, block_m)[0]
+
+
+def _grouped_fwd(lhs, rhs, group_sizes, interpret, block_m):
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(group_sizes).astype(jnp.int32)])
+    out = _grouped_matmul_impl(lhs, rhs, offs, interpret=interpret,
+                               block_m=block_m)
+    return out, (lhs, rhs, group_sizes)
+
+
+def _grouped_bwd(interpret, block_m, res, g):
+    # ragged_dot owns the transpose rule; the Pallas kernel only replaces
+    # the forward.  (A Pallas backward is a follow-up: dlhs is the same
+    # grouped matmul with rhs transposed; drhs a segment-wise outer sum.)
+    lhs, rhs, group_sizes = res
+    _, vjp = jax.vjp(lambda l, r: lax.ragged_dot(l, r, group_sizes), lhs, rhs)
+    dl, dr = vjp(g)
+    return dl, dr, None
+
+
+grouped_matmul.defvjp(_grouped_fwd, _grouped_bwd)
+
+
+def grouped_ffn(params: Dict[str, jax.Array], xs: jax.Array,
+                group_sizes: jax.Array, act: str, *,
+                use_pallas: bool = False, interpret: bool = True,
+                block_m: int = DEFAULT_BLOCK_M) -> jax.Array:
+    """Expert FFN over the expert-sorted (M, d) buffer — dropless twin of
+    ``moe.expert_ffn``.  w_up/w_gate/w_out have leading dim E."""
+    if use_pallas:
+        mm = functools.partial(grouped_matmul, interpret=interpret,
+                               block_m=block_m)
+    else:
+        def mm(l, r, sizes):
+            # f32 accumulation, rounded back per matmul — matches the
+            # sort path's einsum precision in bf16
+            return lax.ragged_dot(
+                l, r, sizes,
+                preferred_element_type=jnp.float32).astype(l.dtype)
+    h = mm(xs, params["w_up"], group_sizes)
+    if act in ("swiglu", "geglu"):
+        gt = mm(xs, params["w_gate"], group_sizes)
+        h = h * (jax.nn.silu(gt) if act == "swiglu" else jax.nn.gelu(gt))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return mm(h, params["w_out"], group_sizes)

@@ -2,14 +2,24 @@
 
 HetuMoE's CUDA kernel packs tokens bound for the same expert into
 contiguous memory with a warp-per-token gather.  TPU adaptation
-(DESIGN.md §2): a scalar-prefetch Pallas gather — the row-index vector is
-prefetched into SMEM and drives the input ``BlockSpec`` index_map, so each
-grid step DMAs exactly the (1, d) row it needs from HBM into VMEM.  This
-is the TPU-idiomatic indirection primitive (the same pattern as
-sparse-dense matmul gathers); XLA's alternative lowers scatter/gather to
-serialized HLO loops.
+(DESIGN.md §2): a scalar-prefetch Pallas gather.  The original port
+issued one (1, d) DMA per grid step — the slowest possible tiling; this
+version is BLOCKED: each grid step produces a ``(block_m, d)`` output
+tile, driven by a ``block_m``-wide slab of the prefetched index vector,
+with the source rows resident in VMEM (constant ``index_map`` → fetched
+once, not per step).  Rows with idx < 0 are zeroed (dropped slots).
 
-Both directions use ONE kernel:
+The VJP is the matching BLOCKED scatter-add kernel: the whole ``(N, d)``
+accumulator stays resident across grid steps (zeroed on step 0) while
+``(block_m, d)`` gradient tiles are scattered into it — the same
+layout transform run in the opposite direction.
+
+VMEM note: both kernels keep the full source/accumulator resident, so
+``N·d`` must fit on-chip; for larger buffers shard the row dimension
+outside the kernel (the MoE layer's per-device buffers are well inside
+the budget at paper dims).
+
+Both directions use ONE gather kernel:
   dispatch  out[r] = tokens[inv[r]]   (inv from the plan; -1 → zeros)
   combine   out[s·K+j] = buffer[slot[s,j]]  (then weighted-sum in jnp)
 """
@@ -22,57 +32,142 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+DEFAULT_BLOCK_M = 128
 
-def _gather_rows_kernel(idx_ref, src_ref, out_ref):
-    # src_ref is the (block, d) slab selected by the index_map below;
-    # rows with idx < 0 are zeroed (dropped slots).
+
+def _pad_len(n: int, block: int) -> int:
+    return (-n) % block
+
+
+def _gather_rows_kernel(idx_ref, src_ref, out_ref, *, block_m: int):
     i = pl.program_id(0)
-    valid = idx_ref[i] >= 0
-    out_ref[...] = jnp.where(valid, src_ref[...], 0)
+    slab = idx_ref[pl.ds(i * block_m, block_m)]
+    rows = jnp.take(src_ref[...], jnp.maximum(slab, 0), axis=0)
+    out_ref[...] = jnp.where((slab >= 0)[:, None], rows, 0)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def gather_rows(src: jax.Array, idx: jax.Array, interpret: bool = True):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def gather_rows(src: jax.Array, idx: jax.Array, interpret: bool = True,
+                block_m: int = DEFAULT_BLOCK_M):
     """out[i] = src[idx[i]] (0 where idx[i] < 0).  src (N, d), idx (M,).
 
-    Differentiable: the VJP is the inverse scatter-add (on TPU that is the
-    same layout-transform run in the opposite direction; indices in a
-    dispatch/combine plan are unique so no real collisions occur).
+    Differentiable: the VJP is the blocked scatter-add kernel below (on
+    TPU that is the same layout-transform run in the opposite direction).
     """
-    return _gather_rows_fwd(src, idx, interpret)[0]
+    return _gather_rows_fwd(src, idx, interpret, block_m)[0]
 
 
-def _gather_rows_fwd(src, idx, interpret):
+def _gather_rows_fwd(src, idx, interpret, block_m):
     # the (N, 0) token carries src's row count + dtype into the bwd pass
     # (shapes/dtypes are not valid residual leaves themselves)
     token = jnp.zeros((src.shape[0], 0), src.dtype)
-    return _gather_rows_impl(src, idx, interpret=interpret), (idx, token)
+    return _gather_rows_impl(src, idx, interpret=interpret,
+                             block_m=block_m), (idx, token)
 
 
-def _gather_rows_bwd(interpret, res, g):
+def _gather_rows_bwd(interpret, block_m, res, g):
     idx, token = res
-    n = token.shape[0]
-    safe = jnp.where(idx >= 0, idx, n)
-    dsrc = jnp.zeros((n, g.shape[1]), g.dtype).at[safe].add(
-        jnp.where((idx >= 0)[:, None], g, 0), mode="drop")
+    dsrc = scatter_add_rows(g, idx, token.shape[0], interpret=interpret,
+                            block_m=block_m)
     return dsrc.astype(token.dtype), None
 
 
 gather_rows.defvjp(_gather_rows_fwd, _gather_rows_bwd)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
+def _gather_rows_impl(src: jax.Array, idx: jax.Array, *,
+                      interpret: bool = True,
+                      block_m: int = DEFAULT_BLOCK_M):
+    M, = idx.shape
+    N, d = src.shape
+    bm = min(block_m, M)
+    pad = _pad_len(M, bm)
+    if pad:
+        idx = jnp.concatenate([idx.astype(jnp.int32),
+                               jnp.full((pad,), -1, jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=((M + pad) // bm,),
+        in_specs=[pl.BlockSpec((N, d), lambda i, idx_ref: (0, 0))],
+        out_specs=pl.BlockSpec((bm, d), lambda i, idx_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_gather_rows_kernel, block_m=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M + pad, d), src.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), src)
+    return out[:M] if pad else out
+
+
+def _scatter_add_kernel(idx_ref, g_ref, out_ref, *, block_m: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    slab = idx_ref[pl.ds(i * block_m, block_m)]
+    n = out_ref.shape[0]
+    # idx < 0 → dumped past the accumulator and dropped by mode="drop";
+    # duplicate indices accumulate (needed by the general VJP).
+    safe = jnp.where(slab >= 0, slab, n)
+    out_ref[...] = out_ref[...].at[safe].add(g_ref[...], mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret", "block_m"))
+def scatter_add_rows(g: jax.Array, idx: jax.Array, n: int, *,
+                     interpret: bool = True,
+                     block_m: int = DEFAULT_BLOCK_M) -> jax.Array:
+    """out (n, d) with out[idx[i]] += g[i] (idx[i] < 0 skipped)."""
+    M, d = g.shape
+    bm = min(block_m, M)
+    pad = _pad_len(M, bm)
+    if pad:
+        idx = jnp.concatenate([idx.astype(jnp.int32),
+                               jnp.full((pad,), -1, jnp.int32)])
+        g = jnp.concatenate([g, jnp.zeros((pad, d), g.dtype)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=((M + pad) // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i, idx_ref: (i, 0))],
+        out_specs=pl.BlockSpec((n, d), lambda i, idx_ref: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_add_kernel, block_m=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), g.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), g)
+
+
+# ---------------------------------------------------------------------------
+# seed reference: the original row-per-step tiling, kept for benchmarking
+# the blocked kernel against (bench_layout) and as the worst-case bound.
+# ---------------------------------------------------------------------------
+
+def _gather_row_kernel(idx_ref, src_ref, out_ref):
+    i = pl.program_id(0)
+    out_ref[...] = jnp.where(idx_ref[i] >= 0, src_ref[...], 0)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _gather_rows_impl(src: jax.Array, idx: jax.Array, *, interpret: bool = True):
+def gather_rows_rowstep(src: jax.Array, idx: jax.Array, *,
+                        interpret: bool = True):
+    """One (1, d) DMA per grid step — the seed tiling (do not use on the
+    hot path; exists so benchmarks can quantify the blocked kernel's win)."""
     M, = idx.shape
     N, d = src.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(M,),
-        in_specs=[pl.BlockSpec((1, d), lambda i, idx_ref: (jnp.maximum(idx_ref[i], 0), 0))],
+        in_specs=[pl.BlockSpec((1, d),
+                               lambda i, idx_ref: (jnp.maximum(idx_ref[i], 0), 0))],
         out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
     )
     return pl.pallas_call(
-        _gather_rows_kernel,
+        _gather_row_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, d), src.dtype),
         interpret=interpret,

@@ -6,6 +6,8 @@ Mosaic.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -21,27 +23,39 @@ def fused_topk(logits: jax.Array, k: int):
 
 def topk_softmax_weights(logits: jax.Array, k: int):
     """Top-k indices + their softmax(logits) probabilities + full probs,
-    all derived from the fused kernel's single pass."""
-    vals, idx, rowmax, sumexp = fused_topk(logits, k)
-    weights = jnp.exp(vals - rowmax) / sumexp
-    probs = jnp.exp(logits.astype(jnp.float32) - rowmax) / sumexp
+    all derived from the fused kernel's single pass.
+
+    The kernel's ``rowmax`` provides the stable exp shift — softmax is
+    shift-invariant, so treating it as a constant keeps the u/Σu jacobian
+    exactly the softmax jacobian (the router still trains); only the Σexp
+    reduction is redone differentiably.
+    """
+    logits = logits.astype(jnp.float32)
+    _, idx, rowmax, _ = fused_topk(jax.lax.stop_gradient(logits), k)
+    u = jnp.exp(logits - jax.lax.stop_gradient(rowmax))
+    probs = u / jnp.sum(u, axis=-1, keepdims=True)
+    weights = jnp.take_along_axis(probs, idx, axis=-1)
     return idx, weights, probs
 
 
 def layout_dispatch(tokens: jax.Array, slot: jax.Array,
-                    num_experts: int, capacity: int) -> jax.Array:
+                    num_experts: int, capacity: int,
+                    inv: Optional[jax.Array] = None) -> jax.Array:
     """(S, d), slot (S, K) → (E·C, d) contiguous-per-expert buffer.
 
-    The scatter is re-expressed as a gather: invert ``slot`` into a row
-    map ``inv (E·C,)`` (cheap jnp scatter of int32 indices), then the
-    Pallas kernel moves the d-wide rows — the bandwidth-heavy part.
+    The scatter is re-expressed as a gather over a row map ``inv (E·C,)``;
+    the blocked Pallas kernel then moves the d-wide rows — the
+    bandwidth-heavy part.  A sort-once :class:`~repro.core.layout
+    .DispatchPlan` already carries ``inv``; pass it to skip the
+    re-inversion scatter here.
     """
-    S, K = slot.shape
-    flat = slot.reshape(-1)
-    tok_idx = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
-    inv = jnp.full((num_experts * capacity,), -1, jnp.int32)
-    inv = inv.at[jnp.where(flat >= 0, flat, num_experts * capacity)].set(
-        tok_idx, mode="drop")
+    if inv is None:
+        S, K = slot.shape
+        flat = slot.reshape(-1)
+        tok_idx = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+        inv = jnp.full((num_experts * capacity,), -1, jnp.int32)
+        inv = inv.at[jnp.where(flat >= 0, flat, num_experts * capacity)].set(
+            tok_idx, mode="drop")
     return layout_transform.gather_rows(tokens, inv, INTERPRET)
 
 
@@ -53,3 +67,8 @@ def layout_combine(buffer: jax.Array, slot: jax.Array,
         buffer, slot.reshape(-1), INTERPRET).reshape(S, K, -1)
     w = (weight * (slot >= 0)).astype(buffer.dtype)
     return jnp.einsum("skd,sk->sd", rows, w)
+
+
+def gather_rows(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """Blocked-kernel row gather (0 where idx < 0) — grouped dispatch."""
+    return layout_transform.gather_rows(src, idx, INTERPRET)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.compat import shard_map
 from repro.core.config import AttentionConfig
 from repro.models.layers import rms_norm, softcap as _softcap
 
@@ -177,7 +178,7 @@ def _flash_path(q, k, v, positions, mesh, *, causal, window, cap, scale,
         return flash_attention(qh, kh, vh, qp, kp, scale, causal, window,
                                cap, min(q_chunk, 512), interpret)
 
-    o = jax.shard_map(
+    o = shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, None, "model", None), P(dp, None, None, None),
                   P(dp, None, None, None), P("model"), P(None)),

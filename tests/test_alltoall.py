@@ -7,12 +7,13 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core import alltoall
+from repro.core.compat import shard_map
 
 RNG = jax.random.PRNGKey(2)
 
 
 def _run(mesh_model8, fn):
-    return jax.jit(jax.shard_map(fn, mesh=mesh_model8, in_specs=P("model"),
+    return jax.jit(shard_map(fn, mesh=mesh_model8, in_specs=P("model"),
                                  out_specs=P("model"), check_vma=False))
 
 
@@ -38,7 +39,7 @@ def test_hierarchical_gradient(mesh_model8):
     x = jax.random.normal(RNG, (64, 4, 8))
 
     def loss(v):
-        out = jax.shard_map(
+        out = shard_map(
             lambda u: alltoall.hierarchical_all_to_all(u, "model", inner=4,
                                                        outer=2),
             mesh=mesh_model8, in_specs=P("model"), out_specs=P("model"),

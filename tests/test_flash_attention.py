@@ -1,10 +1,9 @@
 """Flash-attention Pallas kernels vs the jnp oracle (§Perf H3)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_compat import hypothesis, st
 
 from repro.kernels.flash_attention import flash_attention
 

@@ -1,0 +1,284 @@
+"""Dropless grouped dispatch + sort-once plan state + blocked kernels.
+
+Covers the acceptance properties of the grouped mode: equivalence with
+the sort path when capacity is non-binding, zero drops when it is, and
+bit-identity of the blocked layout kernels against the jnp oracles
+across block sizes including ragged tails.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import capacity, gating, layout, moe
+from repro.core.config import MoEConfig
+from repro.kernels import ref
+from repro.kernels.grouped_ffn import grouped_ffn, grouped_matmul
+from repro.kernels.layout_transform import gather_rows, scatter_add_rows
+
+RNG = jax.random.PRNGKey(9)
+D = 32
+
+
+def _params(cfg, E, dtype=jnp.float32):
+    return moe.init_moe_params(RNG, cfg, D, 64, E, act="swiglu", dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# sort-once plan state
+# ---------------------------------------------------------------------------
+
+def test_plan_sort_carries_consistent_sort_state():
+    S, E, k = 64, 8, 2
+    cfg = MoEConfig(num_experts=E, gate="topk", top_k=k, capacity_factor=1.0)
+    g = gating.route(cfg, jax.random.normal(RNG, (S, E)))
+    C = capacity.expert_capacity(cfg, S, E)
+    plan = layout.plan_sort(g, E, C)
+    counts = np.asarray(plan.counts)
+    offsets = np.asarray(plan.offsets)
+    # counts are the pre-capacity per-expert assignment totals
+    expect = np.bincount(np.asarray(g.expert_index).ravel(), minlength=E)
+    np.testing.assert_array_equal(counts, expect)
+    np.testing.assert_array_equal(offsets, np.concatenate(
+        [[0], np.cumsum(counts)]))
+    # the permutation really sorts the k-major expert ids, stably
+    flat_e = np.asarray(g.expert_index).T.reshape(-1)
+    order = np.asarray(plan.sort_order)
+    assert (np.diff(flat_e[order]) >= 0).all()
+    # inverse map agrees with the token-side slots
+    inv = np.asarray(plan.inv)
+    slot = np.asarray(plan.slot)
+    for s in range(S):
+        for j in range(k):
+            if slot[s, j] >= 0:
+                assert inv[slot[s, j]] == s
+    assert (inv[np.setdiff1d(np.arange(E * C),
+                             slot[slot >= 0].ravel())] == -1).all()
+
+
+def test_dispatch_via_inv_equals_scatter():
+    S, E = 96, 8
+    cfg = MoEConfig(num_experts=E, gate="topk", top_k=2, capacity_factor=1.0)
+    x = jax.random.normal(RNG, (S, D))
+    g = gating.route(cfg, jax.random.normal(RNG, (S, E)))
+    C = capacity.expert_capacity(cfg, S, E)
+    plan = layout.plan_sort(g, E, C)
+    buf = layout.dispatch_scatter(x, plan, E, C)      # inv-gather path
+    fallback = plan._replace(sort_order=None, counts=None,
+                             offsets=None, inv=None)
+    buf2 = layout.dispatch_scatter(x, fallback, E, C)  # token-scatter path
+    np.testing.assert_allclose(np.asarray(buf), np.asarray(buf2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_plan_cumsum_counts_match_sort():
+    S, E = 64, 8
+    cfg = MoEConfig(num_experts=E, gate="topk", top_k=2, capacity_factor=1.0)
+    g = gating.route(cfg, jax.random.normal(RNG, (S, E)))
+    C = capacity.expert_capacity(cfg, S, E)
+    p1 = layout.plan_sort(g, E, C)
+    p2 = layout.plan_cumsum(g, E, C)
+    np.testing.assert_array_equal(np.asarray(p1.slot), np.asarray(p2.slot))
+    np.testing.assert_array_equal(np.asarray(p1.counts),
+                                  np.asarray(p2.counts))
+    np.testing.assert_array_equal(np.asarray(p1.offsets),
+                                  np.asarray(p2.offsets))
+
+
+# ---------------------------------------------------------------------------
+# grouped mode: equivalence + dropless
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gate,kw", [
+    ("switch", {}), ("topk", dict(top_k=2)), ("gshard", {})])
+def test_grouped_equals_sort_when_capacity_ample(mesh1, gate, kw):
+    E = 8
+    cfg_s = MoEConfig(num_experts=E, gate=gate, capacity_factor=8.0,
+                      dispatch="sort", **kw)
+    cfg_g = MoEConfig(num_experts=E, gate=gate, capacity_factor=8.0,
+                      dispatch="grouped", **kw)
+    p = _params(cfg_s, E)
+    x = jax.random.normal(RNG, (4, 16, D))
+    ys, auxs, ms = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh1, cfg_s, p, v, num_experts=E, act="swiglu"))(p, x)
+    yg, auxg, mg = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh1, cfg_g, p, v, num_experts=E, act="swiglu"))(p, x)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yg), atol=1e-5)
+    np.testing.assert_allclose(float(auxs), float(auxg), rtol=1e-6)
+    np.testing.assert_allclose(float(ms["expert_load_max"]),
+                               float(mg["expert_load_max"]), rtol=1e-6)
+
+
+def test_grouped_matches_sort_in_bf16(mesh1):
+    """Grouped matmuls accumulate f32 like the sort path's einsum, so
+    bf16 params stay within bf16 rounding of the sort path."""
+    E = 8
+    cfg_s = MoEConfig(num_experts=E, gate="topk", top_k=2,
+                      capacity_factor=8.0, dispatch="sort")
+    cfg_g = MoEConfig(num_experts=E, gate="topk", top_k=2,
+                      capacity_factor=8.0, dispatch="grouped")
+    p = _params(cfg_s, E, dtype=jnp.bfloat16)
+    x = jax.random.normal(RNG, (4, 16, D), jnp.bfloat16)
+    ys, _, _ = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh1, cfg_s, p, v, num_experts=E, act="swiglu"))(p, x)
+    yg, _, _ = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh1, cfg_g, p, v, num_experts=E, act="swiglu"))(p, x)
+    np.testing.assert_allclose(np.asarray(ys, np.float32),
+                               np.asarray(yg, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_grouped_is_dropless_where_sort_drops(mesh1):
+    """cf=0.25 drops ~3/4 of tokens on the sort path; the grouped path
+    computes every token and matches the no-drop reference everywhere."""
+    E = 4
+    cfg_s = MoEConfig(num_experts=E, gate="switch", capacity_factor=0.25,
+                      dispatch="sort")
+    cfg_g = MoEConfig(num_experts=E, gate="switch", capacity_factor=0.25,
+                      dispatch="grouped")
+    cfg_ref = MoEConfig(num_experts=E, gate="switch", capacity_factor=16.0,
+                        dispatch="sort")
+    p = _params(cfg_s, E)
+    x = jax.random.normal(RNG, (8, 32, D))
+    ys, _, _ = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh1, cfg_s, p, v, num_experts=E, act="swiglu"))(p, x)
+    yg, _, _ = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh1, cfg_g, p, v, num_experts=E, act="swiglu"))(p, x)
+    yr, _, _ = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh1, cfg_ref, p, v, num_experts=E, act="swiglu"))(p, x)
+    dropped = np.isclose(np.asarray(ys).reshape(-1, D), 0).all(axis=1)
+    assert dropped.sum() > 64               # capacity really binds
+    # grouped == unconstrained reference on every token, incl. dropped ones
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yr), atol=1e-5)
+    live = np.abs(np.asarray(yg).reshape(-1, D)).sum(axis=1)
+    assert (live[dropped] > 0).all()        # zero tokens dropped
+
+
+def test_grouped_pallas_matches_ragged(mesh1):
+    E = 8
+    res = {}
+    for pall in (False, True):
+        cfg = MoEConfig(num_experts=E, gate="switch", capacity_factor=2.0,
+                        dispatch="grouped", use_pallas_gate=pall)
+        p = _params(cfg, E)
+        x = jax.random.normal(RNG, (2, 16, D))
+
+        def loss(p, v):
+            y, aux, _ = moe.sharded_moe_apply(mesh1, cfg, p, v,
+                                              num_experts=E, act="swiglu")
+            return jnp.sum(y ** 2) + aux
+
+        l, g = jax.jit(jax.value_and_grad(loss))(p, x)
+        res[pall] = (float(l), float(jnp.linalg.norm(g["gate_w"])),
+                     float(jnp.linalg.norm(g["w_up"])))
+    np.testing.assert_allclose(res[False], res[True], rtol=1e-4)
+
+
+def test_grouped_falls_back_to_sort_under_ep(mesh8):
+    E = 8
+    cfg_g = MoEConfig(num_experts=E, gate="switch", capacity_factor=4.0,
+                      dispatch="grouped")
+    cfg_s = MoEConfig(num_experts=E, gate="switch", capacity_factor=4.0,
+                      dispatch="sort")
+    p = _params(cfg_s, E)
+    x = jax.random.normal(RNG, (4, 16, D))
+    yg, _, _ = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh8, cfg_g, p, v, num_experts=E, act="swiglu"))(p, x)
+    ys, _, _ = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh8, cfg_s, p, v, num_experts=E, act="swiglu"))(p, x)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(ys), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# blocked kernels: bit-identity vs jnp across block sizes + ragged tails
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,M,d,bm", [
+    (64, 64, 128, 16),     # exact multiple
+    (100, 37, 64, 8),      # ragged tail (37 % 8 != 0)
+    (8, 5, 16, 128),       # M < block_m
+    (3, 200, 8, 64),       # tiny source, many rows
+    (33, 130, 8, 128),     # one full + one ragged block
+])
+def test_blocked_gather_bit_identical(N, M, d, bm):
+    key = jax.random.PRNGKey(N * M)
+    src = jax.random.normal(key, (N, d))
+    idx = jax.random.randint(key, (M,), -2, N)
+    out = gather_rows(src, idx, True, bm)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.ref_gather_rows(src, idx)))
+
+
+@pytest.mark.parametrize("N,M,d,bm", [
+    (64, 64, 32, 16), (16, 37, 8, 8), (8, 5, 16, 128)])
+def test_blocked_scatter_add_matches_jnp(N, M, d, bm):
+    key = jax.random.PRNGKey(M)
+    g = jax.random.normal(key, (M, d))
+    idx = jax.random.randint(key, (M,), -2, N)       # dups + drops
+    out = scatter_add_rows(g, idx, N, interpret=True, block_m=bm)
+    expect = np.zeros((N, d), np.float32)
+    for j, i in enumerate(np.asarray(idx)):
+        if i >= 0:
+            expect[i] += np.asarray(g)[j]
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6, atol=1e-6)
+
+
+def test_blocked_gather_vjp_uses_blocked_scatter():
+    src = jax.random.normal(RNG, (8, 16))
+    idx = jnp.array([0, 0, 3, -1, 7])
+    for bm in (2, 128):
+        g = jax.grad(lambda s: jnp.sum(gather_rows(s, idx, True, bm) ** 2))(src)
+        out = np.asarray(ref.ref_gather_rows(src, idx))
+        expect = np.zeros((8, 16), np.float32)
+        for j, i in enumerate([0, 0, 3, -1, 7]):
+            if i >= 0:
+                expect[i] += 2 * out[j]
+        np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul kernel vs lax.ragged_dot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,E,bm,tail", [
+    (64, 16, 24, 4, 16, 0),
+    (100, 8, 8, 3, 128, 7),     # virtual-bucket tail rows → zeros
+    (37, 32, 16, 5, 8, 3),      # ragged blocks + tail
+])
+def test_grouped_matmul_matches_ragged_dot(M, K, N, E, bm, tail):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(M), 2)
+    lhs = jax.random.normal(k1, (M, K))
+    rhs = jax.random.normal(k2, (E, K, N))
+    total = M - tail
+    cuts = np.sort(np.random.RandomState(0).randint(0, total + 1, E - 1))
+    sizes = jnp.array(np.diff(np.concatenate([[0], cuts, [total]])),
+                      jnp.int32)
+    out = grouped_matmul(lhs, rhs, sizes, True, bm)
+    expect = jax.lax.ragged_dot(lhs, rhs, sizes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    if tail:
+        assert np.allclose(np.asarray(out)[total:], 0.0)
+    g1 = jax.grad(lambda l, r: jnp.sum(
+        grouped_matmul(l, r, sizes, True, bm) ** 2), (0, 1))(lhs, rhs)
+    g2 = jax.grad(lambda l, r: jnp.sum(
+        jax.lax.ragged_dot(l, r, sizes) ** 2), (0, 1))(lhs, rhs)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_ffn_paths_agree():
+    E, d, f = 4, 16, 32
+    key = jax.random.PRNGKey(2)
+    params = {
+        "w_up": jax.random.normal(key, (E, d, f)),
+        "w_gate": jax.random.normal(key, (E, d, f)),
+        "w_out": jax.random.normal(key, (E, f, d)),
+    }
+    xs = jax.random.normal(key, (64, d))
+    sizes = jnp.array([20, 10, 4, 30], jnp.int32)
+    y1 = grouped_ffn(params, xs, sizes, "swiglu", use_pallas=False)
+    y2 = grouped_ffn(params, xs, sizes, "swiglu", use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)

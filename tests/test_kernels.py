@@ -1,10 +1,9 @@
 """Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_compat import hypothesis, st
 
 from repro.kernels import ops, ref
 from repro.kernels.layout_transform import gather_rows

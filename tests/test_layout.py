@@ -1,10 +1,9 @@
 """Layout transform (paper Fig. 4): sort path ≡ dense path, capacity/drop
 semantics, round-trip."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+from hypothesis_compat import hypothesis, st
 
 from repro.core import capacity, gating, layout
 from repro.core.config import MoEConfig
