@@ -14,6 +14,11 @@ equivalent dense einsum here), so grouped ABSOLUTE µs are pessimistic
 in this container; on TPU the ragged matmul is MXU-native and the
 grouped FLOP count (Σ n_e rows, no padding) is the lower bound.  The
 drop-rate column is the load-independent deliverable.
+
+``run_ep`` adds the expert-parallel configuration: the grouped
+AllToAll (count exchange + bounded segments) vs the capacity-padded
+sort exchange on a 4-way model mesh, flat and hierarchical — the
+composition of the paper's two-stage a2a with dropless dispatch.
 """
 import jax
 import jax.numpy as jnp
@@ -23,6 +28,7 @@ from repro.core import capacity, gating, layout, moe
 from repro.core.config import MoEConfig
 
 CFS = (0.5, 1.0, 1.25, 2.0)
+EP_WAYS = 4
 
 
 def run(paper: bool = False):
@@ -65,6 +71,61 @@ def run(paper: bool = False):
              vs_sort=t["sort"] / t["grouped"],
              vs_dense=t["dense"] / t["grouped"],
              sort_drop_rate=drop)
+
+    run_ep(paper=paper)
+
+
+def run_ep(paper: bool = False):
+    """Expert-parallel grouped dispatch: the grouped AllToAll (count
+    exchange + bounded segments) vs the capacity-padded sort exchange on
+    an EP_WAYS-way 'model' mesh, flat and hierarchical.  Absolute µs are
+    fake-device CPU numbers; the grouped-vs-sort and hier-vs-flat RATIOS
+    are the tracked deliverables."""
+    if len(jax.devices()) < EP_WAYS:
+        # run.py only setdefault()s XLA_FLAGS — a preexisting value in the
+        # shell leaves 1 device.  write_json carries the committed
+        # grouped/ep4/* entries over un-refreshed; say why.
+        print(f"# WARNING: grouped/ep{EP_WAYS} SKIPPED — "
+              f"{len(jax.devices())} device(s) < {EP_WAYS}; committed "
+              f"grouped/ep{EP_WAYS}/* entries will NOT be refreshed "
+              f"(unset XLA_FLAGS or include "
+              f"--xla_force_host_platform_device_count=8)")
+        return
+    from repro.launch.mesh import make_smoke_mesh
+    mesh = make_smoke_mesh((EP_WAYS,), ("model",))
+    d, d_ff, E = (512, 512, 16) if paper else (128, 128, 16)
+    S = 2048 if paper else 512
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (S, d), jnp.float32)
+    base = MoEConfig(num_experts=E, gate="switch", capacity_factor=1.25)
+    params = moe.init_moe_params(key, base, d, d_ff, E, act="relu",
+                                 dtype=jnp.float32)
+
+    def layer_fn(cfg):
+        @jax.jit
+        def fn(p, v):
+            y, _, _ = moe.sharded_moe_apply(mesh, cfg, p, v,
+                                            num_experts=E, act="relu")
+            return y
+        return fn
+
+    t = {}
+    for mode, a2a in (("sort", "flat"), ("sort", "hierarchical"),
+                      ("grouped", "flat"), ("grouped", "hierarchical")):
+        cfg = MoEConfig(num_experts=E, gate="switch", capacity_factor=1.25,
+                        dispatch=mode, a2a=a2a, a2a_inner=2)
+        t[(mode, a2a)] = timeit(layer_fn(cfg), params, x)
+
+    for (mode, a2a), us in t.items():
+        ratios = {}
+        derived = f"ep{EP_WAYS}"
+        if mode == "grouped":
+            ratios["vs_sort"] = t[("sort", a2a)] / us
+            derived += f"; vs_sort={ratios['vs_sort']:.2f}x"
+        if a2a == "hierarchical":
+            ratios["vs_flat"] = t[(mode, "flat")] / us
+            derived += f"; vs_flat={ratios['vs_flat']:.2f}x"
+        emit(f"grouped/ep{EP_WAYS}/{mode}_{a2a}/S{S}", us, derived, **ratios)
 
 
 if __name__ == "__main__":

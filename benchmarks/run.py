@@ -1,6 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--paper] [--only topk,layout,...]
+  PYTHONPATH=src python -m benchmarks.run --check [--only grouped]
 
 Output: ``name,us_per_call,derived`` CSV lines on stdout PLUS a
 machine-readable ``BENCH_moe.json`` at the repo root (name → µs +
@@ -9,6 +10,21 @@ parsing stdout.  8 fake CPU devices so the AllToAll paths execute;
 absolute µs are CPU-emulation numbers — the cross-variant RATIOS and
 the α–β model outputs are the deliverables (see EXPERIMENTS.md).
 Roofline numbers come from launch/dryrun.py, not from here.
+
+``--check`` reruns the named suites and DIFFS them against the
+committed ``BENCH_moe.json`` instead of rewriting it: entries slower
+than the committed number by >25% (tunable via ``--check-factor``) fail
+the run (exit 1), so perf PRs regress against tracked numbers, not
+eyeballed stdout.  New entries are reported but never fail — commit
+them with a plain run first.  Because this container's cpu throttling
+shifts WHOLE runs by more than the threshold, each entry is first
+normalized by the run-level median drift (see ``check_json``), and
+sub-ms entries are reported but never gated — the gate catches code
+paths that regressed relative to their run, the same relative signal
+the rest of this harness tracks.  Residual per-entry throttling can
+still exceed 25% on this box: when an entry you didn't touch trips the
+gate, rerun before trusting it, or widen ``--check-factor 1.6`` for
+the session.
 """
 import os
 
@@ -30,14 +46,21 @@ def write_json(wanted) -> None:
     # merge into any existing file: a partial --only run must refresh its
     # own suites' entries (matched by the recorded "suite" field) without
     # deleting the other suites' tracked numbers (ROADMAP tells future
-    # PRs to diff against this file).
-    suites, entries = [], {}
+    # PRs to diff against this file).  Entries of a rerun suite that this
+    # run did NOT re-emit are carried over, not deleted — a benchmark
+    # section that skipped itself (e.g. bench_grouped.run_ep without
+    # enough devices) must not silently erase its tracked trajectory;
+    # prune renamed entries by hand.
+    suites, entries, prev_wanted = [], {}, {}
     if JSON_PATH.exists():
         try:
             prev = json.loads(JSON_PATH.read_text())
             suites = [s for s in prev.get("suites", []) if s not in wanted]
-            entries = {k: v for k, v in prev.get("entries", {}).items()
-                       if v.get("suite") not in wanted}
+            for k, v in prev.get("entries", {}).items():
+                if v.get("suite") in wanted:
+                    prev_wanted[k] = v
+                else:
+                    entries[k] = v
         except (ValueError, OSError):
             pass
     for r in RESULTS:
@@ -46,10 +69,81 @@ def write_json(wanted) -> None:
             entry["derived"] = r["derived"]
         entry.update(r["ratios"])
         entries[r["name"]] = entry
+        prev_wanted.pop(r["name"], None)
+    if prev_wanted:
+        print(f"# carried over {len(prev_wanted)} committed entr"
+              f"{'y' if len(prev_wanted) == 1 else 'ies'} not re-emitted "
+              f"by this run: {', '.join(sorted(prev_wanted))}")
+        entries.update(prev_wanted)
     JSON_PATH.write_text(json.dumps(
         {"suites": suites + list(wanted), "entries": entries},
         indent=2) + "\n")
     print(f"# wrote {JSON_PATH} ({len(entries)} entries)")
+
+
+DEFAULT_CHECK_FACTOR = 1.25
+# Entries whose committed time is under this are reported but never fail
+# the gate: at sub-ms scale on this 2-CPU container, Python/scheduler
+# jitter alone exceeds the regression threshold (observed: ~250µs
+# interpret-mode kernels flapping 1.4x between back-to-back runs).
+NOISE_FLOOR_US = 1000.0
+
+
+def check_json(factor: float = DEFAULT_CHECK_FACTOR) -> int:
+    """Diff this run's RESULTS (already filtered to the suites that ran)
+    against the committed BENCH_moe.json.
+
+    The container's cpu-shares throttling shifts WHOLE runs by well over
+    the threshold (observed 1.6× on 40ms entries), so absolute µs can't
+    gate directly — consistent with this harness's contract that only
+    cross-variant ratios transfer.  Each entry's new/old ratio is
+    therefore normalized by the run-level MEDIAN ratio (the machine
+    drift): an entry fails only when it is ``factor``× slower than the
+    rest of its run moved together, i.e. a real relative regression in
+    that code path.  Returns the exit code: 1 iff any gated entry fails.
+    """
+    from benchmarks.common import RESULTS
+    if not JSON_PATH.exists():
+        print(f"# --check: no {JSON_PATH} to diff against — run without "
+              f"--check first and commit it")
+        return 2                        # setup error, not a regression
+    try:
+        prev = json.loads(JSON_PATH.read_text()).get("entries", {})
+    except (ValueError, OSError) as e:
+        print(f"# --check: cannot read {JSON_PATH}: {e}")
+        return 2                        # setup error, not a regression
+    # drift from the gated (≥ noise floor) entries only — the sub-ms ones
+    # are declared noise-dominated, so they must not steer the baseline
+    ratios = sorted(r["us"] / prev[r["name"]]["us"] for r in RESULTS
+                    if prev.get(r["name"], {}).get("us", 0) >= NOISE_FLOOR_US)
+    drift = ratios[len(ratios) // 2] if ratios else 1.0
+    print(f"# machine drift (median new/old): {drift:.2f}x "
+          f"across {len(ratios)} gated entries")
+    regressions = []
+    for r in RESULTS:
+        old = prev.get(r["name"])
+        if old is None or "us" not in old:
+            print(f"# {'NEW':11s}{r['name']}: {r['us']:.1f}us (untracked — "
+                  f"commit with a plain run)")
+            continue
+        ratio = (r["us"] / old["us"] / drift) if old["us"] else float("inf")
+        slow = ratio > factor
+        gated = old["us"] >= NOISE_FLOOR_US
+        tag = ("REGRESSION" if slow and gated
+               else "noisy" if slow else "ok")
+        print(f"# {tag:11s}{r['name']}: {old['us']:.1f}us -> "
+              f"{r['us']:.1f}us ({ratio:.2f}x drift-normalized)")
+        if slow and gated:
+            regressions.append((r["name"], ratio))
+    if regressions:
+        print(f"# --check FAILED: {len(regressions)} entr"
+              f"{'y' if len(regressions) == 1 else 'ies'} regressed "
+              f">{factor - 1:.0%} beyond machine drift vs committed "
+              f"BENCH_moe.json")
+        return 1
+    print(f"# --check ok: no regression >{factor - 1:.0%} beyond machine "
+          f"drift across {len(RESULTS)} entries")
+    return 0
 
 
 def main() -> None:
@@ -59,6 +153,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: topk,layout,alltoall,breakdown,"
                          "overall,grouped")
+    ap.add_argument("--check", action="store_true",
+                    help="diff against committed BENCH_moe.json instead of "
+                         "rewriting it; exit 1 on regression")
+    ap.add_argument("--check-factor", type=float,
+                    default=DEFAULT_CHECK_FACTOR,
+                    help="slowdown ratio that counts as a regression "
+                         "(default 1.25; widen on noisy machines)")
     args = ap.parse_args()
     from benchmarks import (bench_alltoall, bench_breakdown, bench_grouped,
                             bench_layout, bench_overall, bench_topk)
@@ -66,15 +167,40 @@ def main() -> None:
             "alltoall": bench_alltoall, "breakdown": bench_breakdown,
             "overall": bench_overall, "grouped": bench_grouped}
     wanted = args.only.split(",") if args.only else list(mods)
+    if args.check and not JSON_PATH.exists():
+        # fail before burning minutes of benchmarking on a setup error
+        print(f"# --check: no {JSON_PATH} to diff against — run without "
+              f"--check first and commit it")
+        sys.exit(1)
     print("name,us_per_call,derived")
     from benchmarks.common import RESULTS
-    for name in wanted:
-        print(f"# --- {name} (paper fig {FIGS[name]}) ---")
-        sys.stdout.flush()
-        start = len(RESULTS)
-        mods[name].run(paper=args.paper)
-        for r in RESULTS[start:]:       # tag for the JSON merge
-            r["suite"] = name
+
+    def run_suites():
+        for name in wanted:
+            print(f"# --- {name} (paper fig {FIGS[name]}) ---")
+            sys.stdout.flush()
+            start = len(RESULTS)
+            mods[name].run(paper=args.paper)
+            for r in RESULTS[start:]:       # tag for the JSON merge
+                r["suite"] = name
+
+    run_suites()
+    if args.check:
+        code = check_json(args.check_factor)
+        if code == 1:
+            # a throttled container can fake a regression in any single
+            # measurement; a REAL one persists.  Remeasure once and gate
+            # on the best of the two runs.  (Setup errors — code 2 —
+            # exit immediately.)
+            print("# --check: remeasuring once to rule out throttling "
+                  "noise (gating on best-of-2)")
+            best = {r["name"]: r["us"] for r in RESULTS}
+            RESULTS.clear()
+            run_suites()
+            for r in RESULTS:
+                r["us"] = min(r["us"], best.get(r["name"], r["us"]))
+            code = check_json(args.check_factor)
+        sys.exit(code)
     write_json(wanted)
 
 

@@ -79,15 +79,53 @@ def hierarchical_all_to_all(x: jax.Array, axis_name: str, *,
 
 def all_to_all(x: jax.Array, axis_name: str, *, mode: str = "flat",
                inner: int = 1, outer: Optional[int] = None) -> jax.Array:
-    """Mode-dispatching entry point used by the MoE layer."""
+    """Mode-dispatching entry point used by the MoE layer.
+
+    ``mode="hierarchical"`` requires ``inner`` to divide the axis size
+    exactly: a silent floor (``outer = M // inner``) would either quietly
+    run flat (inner > M) or trip an opaque reshape assert deep inside the
+    ``shard_map`` trace (outer·inner != M).  Validated up front instead.
+    """
     if mode == "flat" or inner <= 1:
         return flat_all_to_all(x, axis_name)
     assert mode == "hierarchical", mode
+    M = x.shape[0]
+    if M % inner != 0:
+        raise ValueError(
+            f"hierarchical AllToAll: axis {axis_name!r} has size {M} "
+            f"(the expert-parallel model_size), which inner={inner} "
+            f"(MoEConfig.a2a_inner) does not divide — pick a2a_inner "
+            f"from the divisors of {M}, or use a2a='flat'")
     if outer is None:
-        outer = x.shape[0] // inner
+        outer = M // inner
+    if outer * inner != M:
+        raise ValueError(
+            f"hierarchical AllToAll: outer={outer} · inner={inner} != "
+            f"axis size {M} (axis {axis_name!r})")
     if outer <= 1:
         return flat_all_to_all(x, axis_name)
     return hierarchical_all_to_all(x, axis_name, inner=inner, outer=outer)
+
+
+def grouped_all_to_all(tokens: jax.Array, counts: jax.Array,
+                       axis_name: str, *, mode: str = "flat",
+                       inner: int = 1):
+    """Grouped-EP exchange: bounded token segments plus their counts.
+
+    ``tokens`` ``(M, B, d)`` destination-major — chunk m holds the first
+    ``counts[m].sum()`` rows this rank sends to rank m (expert-sorted, B
+    the static segment bound); ``counts`` ``(M, E_local)`` destination-
+    major per-(rank, local-expert) row counts.  Returns the source-major
+    pair ``(recv_tokens, recv_counts)``: chunk m of each is what rank m
+    sent here.  The token payload rides the flat OR hierarchical
+    collective (the paper's two-stage win applies unchanged — segments
+    are opaque (B, d) chunks); the tiny count matrix always goes flat,
+    since its bytes are noise next to its latency.
+    """
+    recv_counts = lax.all_to_all(counts, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=True)
+    recv_tokens = all_to_all(tokens, axis_name, mode=mode, inner=inner)
+    return recv_tokens, recv_counts
 
 
 # ---------------------------------------------------------------------------

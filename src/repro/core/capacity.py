@@ -13,15 +13,49 @@ from repro.core.config import MoEConfig
 from repro.core import gating
 
 
+def _round_up(n: int, align: int) -> int:
+    return math.ceil(n / align) * align
+
+
 def expert_capacity(cfg: MoEConfig, num_tokens: int, num_experts: int,
                     *, align: int = 8) -> int:
     """Per-expert token capacity for a group of ``num_tokens`` tokens.
 
     capacity = ceil(k · S / E · capacity_factor), rounded up to ``align``
     (sublane alignment for the (E, C, d) dispatch buffer; the d dimension
-    carries the 128-lane requirement).
+    carries the 128-lane requirement).  The total-assignment clamp
+    (no expert can ever see more than S·k tokens) is itself rounded up to
+    ``align`` so the result ALWAYS honors the alignment contract — a raw
+    ``min(cap, S·k)`` returns e.g. 4 for a T=4/K=1 decode batch.
     """
     k = gating.gate_k(cfg)
     cap = math.ceil(num_tokens * k / num_experts * cfg.capacity_factor)
-    cap = max(align, math.ceil(cap / align) * align)
-    return min(cap, num_tokens * k)
+    cap = max(align, _round_up(cap, align))
+    return min(cap, _round_up(num_tokens * k, align))
+
+
+def grouped_segment_bound(cfg: MoEConfig, num_tokens: int, model_size: int,
+                          *, align: int = 8) -> int:
+    """Static per-(source, destination)-rank row bound B for the grouped
+    expert-parallel AllToAll (the dropless path's capacity analogue).
+
+    XLA needs static shapes, so the exchanged ``(model_size, B, d)``
+    buffer cannot size itself from the runtime counts; B comes from
+    config instead:
+
+      * ``grouped_ep_bound_factor is None`` (default) → B = T·K — a rank
+        can receive every local assignment, so the exchange NEVER drops
+        (truly dropless, at the cost of an M×-padded exchange buffer).
+      * factor f → B = ceil(T·K/M · f) rounded up to ``align``: the
+        balanced per-rank share times a capacity-factor-style headroom.
+        Rows past B for one destination rank drop (zero output, residual
+        carries the token — sort-path semantics).
+    """
+    k = gating.gate_k(cfg)
+    total = num_tokens * k
+    dropless = _round_up(total, align)
+    f = cfg.grouped_ep_bound_factor
+    if model_size <= 1 or f is None:
+        return dropless
+    b = max(align, _round_up(math.ceil(total / model_size * f), align))
+    return min(b, dropless)

@@ -29,8 +29,11 @@ A2A_MODES = ("flat", "hierarchical")
 # sort    = HetuMoE layout-transform into the capacity-padded (E·C, d) buffer
 # dense   = one-hot einsum baseline (GShard/DeepSpeed)
 # grouped = dropless: expert-sorted (S·K, d) buffer + ragged/grouped expert
-#           matmuls (MegaBlocks-style); single-device path — falls back to
-#           "sort" under expert parallelism (model_size > 1)
+#           matmuls (MegaBlocks-style).  Under expert parallelism
+#           (model_size > 1) the grouped AllToAll exchanges per-expert
+#           counts then bounded token segments (core/alltoall.py,
+#           core/layout.py GroupedEPPlan); only expert-TP mode still
+#           falls back to "sort".
 DISPATCH_MODES = ("sort", "dense", "grouped")
 
 
@@ -48,6 +51,13 @@ class MoEConfig:
     dispatch: str = "sort"                 # see DISPATCH_MODES above
     a2a: str = "flat"                      # "flat" | "hierarchical"
     a2a_inner: int = 4                     # inner group size for hierarchical a2a
+    # Grouped-EP segment bound: per-(source, destination)-rank row budget
+    # for the grouped AllToAll, as a multiple of the balanced share
+    # T·K/model_size.  None → T·K (any single rank may receive every
+    # assignment: truly dropless, maximal padding).  Smaller values trade
+    # exchange-buffer padding for sort-style drops when one rank's demand
+    # exceeds the bound.  See capacity.grouped_segment_bound.
+    grouped_ep_bound_factor: Optional[float] = None
     aux_loss_weight: float = 0.01
     router_z_loss_weight: float = 0.0
     router_dtype: str = "float32"
@@ -61,6 +71,14 @@ class MoEConfig:
         assert self.gate in GATE_STRATEGIES, self.gate
         assert self.a2a in A2A_MODES, self.a2a
         assert self.dispatch in DISPATCH_MODES, self.dispatch
+        if self.a2a_inner < 1:
+            raise ValueError(
+                f"MoEConfig.a2a_inner must be >= 1, got {self.a2a_inner}")
+        if (self.grouped_ep_bound_factor is not None
+                and self.grouped_ep_bound_factor <= 0):
+            raise ValueError(
+                f"MoEConfig.grouped_ep_bound_factor must be positive or "
+                f"None, got {self.grouped_ep_bound_factor}")
 
 
 @dataclass(frozen=True)

@@ -22,24 +22,42 @@ dispatch modes, selected by ``MoEConfig.dispatch``:
             the Pallas grouped kernel, kernels/grouped_ffn.py).  Cost:
             O(S·K·log(S·K)) + O(S·K·d) movement + exactly Σ_e n_e FFN
             rows — no padding FLOPs at low load, no drops at high load.
-            Single-device / data-parallel only for now (falls back to
-            ``sort`` under expert parallelism; grouped a2a is an open
-            roadmap item).
+            Under expert parallelism (model_size M > 1) the grouped
+            AllToAll takes over: per-expert counts cross the ``model``
+            axis first, then each destination rank's expert-sorted rows
+            packed to a STATIC per-rank segment bound B
+            (:func:`repro.core.capacity.grouped_segment_bound`); the
+            receive side rebuilds expert-major offsets from the counts
+            and runs the same ragged matmuls (:class:`GroupedEPPlan`,
+            :func:`plan_grouped_ep`, :func:`grouped_ep_receive_maps`).
 
-Cost model (per device, S tokens, K slots, E experts, capacity C):
+Cost model (per device, S tokens, K slots, E experts, capacity C,
+M expert-parallel ranks, segment bound B):
 
-    ==========  ============================  =======================
+    ==========  ============================  =========================
     mode        index work                    data movement / FLOPs
-    ==========  ============================  =======================
+    ==========  ============================  =========================
     sort        1 stable sort (S·K)           E·C·d rows moved
     dense       K cumsums over (S, E)         S·E·C·d MAC einsum
     grouped     1 stable sort (S·K)           S·K·d rows moved,
                                               Σ n_e ragged FFN rows
-    ==========  ============================  =======================
+    grouped-EP  1 stable sort (S·K)           2·M·E/M ints (counts) +
+                + O(M·B) map arithmetic       2·M·B·d rows exchanged
+                                              (vs sort-EP's 2·E·C·d),
+                                              Σ n_e ragged FFN rows
+    ==========  ============================  =========================
+
+The grouped-EP exchange pads to the segment bound B instead of the
+per-expert capacity E·C: with the default fully-dropless B = S·K the
+buffer is M·S·K rows; with a bound factor f it is f·S·K rows total —
+independent of E, so wide-expert layers (E ≫ M) exchange far less than
+the capacity-padded path while still never padding the FFN itself.
 
 For ``sort``/``dense``, dropped tokens (position ≥ capacity) get
 ``slot = -1`` and weight 0: the residual connection carries them
-unchanged (Switch semantics).  ``grouped`` never drops.
+unchanged (Switch semantics).  ``grouped`` never drops on one device;
+under EP it drops only when one destination rank's demand exceeds the
+segment bound (impossible at the default bound).
 """
 from __future__ import annotations
 
@@ -87,6 +105,33 @@ class GroupedPlan(NamedTuple):
     weight: jax.Array
     counts: jax.Array
     offsets: jax.Array
+
+
+class GroupedEPPlan(NamedTuple):
+    """Send-side state for the grouped expert-parallel AllToAll.
+
+    Built from a :class:`GroupedPlan` whose expert-sorted buffer is, by
+    construction, destination-RANK-sorted too (experts shard contiguously
+    over ranks): rank m's rows are the segment
+    ``offsets[m·E_local] : offsets[(m+1)·E_local]``.  The plan freezes
+    that ragged structure into the static ``(M, B, d)`` exchange layout
+    (B the segment bound, a Python int):
+
+    ``bound``       int            — B, rows per destination-rank chunk
+    ``send_counts`` (M, E_local) int32 — rows PACKED per (dest rank,
+                    local expert); differs from the raw routing counts
+                    only when the bound truncates a rank's segment
+    ``pack_map``    (M·B,) int32   — exchange slot → source TOKEN row
+                    (-1 = padding), composing the sort gather with the
+                    per-rank packing so dispatch is ONE row gather
+    ``back_map``    (S·K,) int32   — sorted assignment row → exchange
+                    slot (-1 = bound-dropped or virtual-bucket row), the
+                    return path's gather map
+    """
+    bound: int
+    send_counts: jax.Array
+    pack_map: jax.Array
+    back_map: jax.Array
 
 
 def _offsets(counts: jax.Array) -> jax.Array:
@@ -208,6 +253,91 @@ def plan_grouped(gate: GateOutput, num_experts: int,
                        offsets=_offsets(counts).astype(jnp.int32))
 
 
+def plan_grouped_ep(gplan: GroupedPlan, num_experts: int, model_size: int,
+                    bound: int) -> GroupedEPPlan:
+    """Freeze a :class:`GroupedPlan` into the static grouped-EP exchange
+    layout (see :class:`GroupedEPPlan`).  ``bound`` must be a Python int
+    (:func:`repro.core.capacity.grouped_segment_bound`)."""
+    E, M, B = num_experts, model_size, bound
+    assert E % M == 0, (E, M)
+    E_local = E // M
+    TK = gplan.token.shape[0]
+    # rank boundaries in the expert-sorted buffer; bounds[M] = offsets[E]
+    # excludes the virtual drop bucket's tail
+    bounds = gplan.offsets[jnp.arange(M + 1) * E_local]            # (M+1,)
+    rank_start = bounds[:-1]
+    # per-(rank, expert) offsets RELATIVE to the rank segment, clipped at
+    # the bound: truncation cuts the segment's tail (later experts first)
+    g_off = gplan.offsets[jnp.arange(M)[:, None] * E_local
+                          + jnp.arange(E_local + 1)[None, :]]      # (M, El+1)
+    rel = jnp.minimum(g_off - rank_start[:, None], B)
+    send_counts = (rel[:, 1:] - rel[:, :-1]).astype(jnp.int32)
+    sent = rel[:, -1]                                              # (M,) ≤ B
+    # pack: slot (m, j) ← sorted row rank_start[m]+j, straight to tokens
+    j = jnp.arange(B)
+    rows = rank_start[:, None] + j[None, :]                        # (M, B)
+    tok = gplan.token[jnp.clip(rows, 0, max(TK - 1, 0))]
+    pack_map = jnp.where(j[None, :] < sent[:, None], tok, -1)
+    # back: sorted row r → its exchange slot (searchsorted-by-comparison;
+    # M is small and this handles empty ranks' duplicate boundaries)
+    r = jnp.arange(TK)
+    m_of = jnp.sum(r[:, None] >= bounds[None, 1:], axis=-1)        # 0..M
+    m_safe = jnp.clip(m_of, 0, M - 1)
+    jj = r - bounds[m_safe]
+    ok = (m_of < M) & (jj < B)
+    back_map = jnp.where(ok, m_safe * B + jj, -1)
+    return GroupedEPPlan(bound=B, send_counts=send_counts,
+                         pack_map=pack_map.reshape(M * B).astype(jnp.int32),
+                         back_map=back_map.astype(jnp.int32))
+
+
+def grouped_ep_receive_maps(recv_counts: jax.Array, bound: int):
+    """Rebuild local offsets from the exchanged counts (receive side).
+
+    ``recv_counts`` (M, E_local) source-major — rows rank m sent here per
+    local expert; ``bound`` the static B.  The received ``(M·B, d)``
+    buffer is source-major / expert-sorted WITHIN each source chunk; the
+    grouped FFN wants expert-major across sources.  Returns
+
+      ``ffn_src``     (M·B,) int32 — FFN row → received-buffer row (-1
+                      past the real rows: those FFN rows read zeros and
+                      sit beyond ``group_sizes.sum()``, which the ragged
+                      matmuls never touch)
+      ``dst_map``     (M·B,) int32 — received-buffer row → FFN row (-1
+                      = padding slot); the return path gathers the FFN
+                      output back into exchange layout with it
+      ``group_sizes`` (E_local,) int32 — FFN rows per local expert
+
+    Pure offset arithmetic off the count matrix — no sort: destination
+    row = expert base + rows from earlier source ranks + rank-local rank.
+    """
+    M, E_local = recv_counts.shape
+    B = bound
+    src_off = jnp.concatenate(
+        [jnp.zeros((M, 1), jnp.int32),
+         jnp.cumsum(recv_counts, axis=1, dtype=jnp.int32)], axis=1)
+    chunk_tot = src_off[:, -1]                                     # (M,) ≤ B
+    j = jnp.arange(B)
+    # local expert of slot (m, j): how many segment ends are ≤ j
+    e_id = jnp.sum(j[None, :, None] >= src_off[:, None, 1:], axis=-1)
+    e_safe = jnp.clip(e_id, 0, E_local - 1)
+    group_sizes = jnp.sum(recv_counts, axis=0, dtype=jnp.int32)    # (El,)
+    e_base = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes)[:-1]])
+    from_prev = (jnp.cumsum(recv_counts, axis=0, dtype=jnp.int32)
+                 - recv_counts)                                    # (M, El)
+    dst = (e_base[e_safe]
+           + jnp.take_along_axis(from_prev, e_safe, axis=1)
+           + (j[None, :] - jnp.take_along_axis(src_off, e_safe, axis=1)))
+    dst = jnp.where(j[None, :] < chunk_tot[:, None], dst, -1)
+    dst_map = dst.reshape(M * B).astype(jnp.int32)
+    # invert: FFN row → received row (valid dst values are distinct)
+    ffn_src = jnp.full((M * B,), -1, jnp.int32)
+    ffn_src = ffn_src.at[jnp.where(dst_map >= 0, dst_map, M * B)].set(
+        jnp.arange(M * B, dtype=jnp.int32), mode="drop")
+    return ffn_src, dst_map, group_sizes
+
+
 # ---------------------------------------------------------------------------
 # dispatch / combine execution
 # ---------------------------------------------------------------------------
@@ -246,6 +376,13 @@ def combine_gather(expert_out: jax.Array, plan: DispatchPlan) -> jax.Array:
 def dispatch_grouped(tokens: jax.Array, plan: GroupedPlan) -> jax.Array:
     """(S, d) → (S·K, d) expert-sorted buffer — no padding, no drops."""
     return tokens[plan.token]
+
+
+def take_rows(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i] = src[idx[i]], zeros where idx < 0 — the jnp twin of the
+    blocked Pallas ``gather_rows`` kernel, for maps carrying -1 padding
+    (grouped-EP pack/unpack)."""
+    return jnp.where(idx[:, None] >= 0, src[jnp.maximum(idx, 0)], 0)
 
 
 def combine_grouped(expert_out: jax.Array, plan: GroupedPlan,

@@ -9,10 +9,18 @@ Per-device flow (inside ``shard_map``):
     5. AllToAll        return path (same mode)
     6. reverse xform   gather + weighted combine            [core/layout]
 
-``cfg.dispatch == "grouped"`` short-circuits 2–6 into the dropless path:
+``cfg.dispatch == "grouped"`` replaces 2–6 with the dropless path:
 expert-sorted (T·K, d) buffer + grouped/ragged expert matmuls, no
-capacity padding and no drops (single-device; falls back to ``sort``
-under expert parallelism — grouped a2a is a roadmap item).
+capacity padding.  Under expert parallelism the grouped AllToAll runs
+instead of the capacity-padded one: per-expert counts cross the
+``model`` axis first (a (M, E_local) int exchange), then each
+destination rank's rows packed to a static segment bound B
+(capacity.grouped_segment_bound; B = T·K by default → never drops);
+the receive side rebuilds expert-major offsets from the counts and
+feeds the same ragged matmuls, and the combine reverses the path.
+Both a2a modes (flat / hierarchical) carry the token payload, so the
+paper's two-stage win composes with dropless dispatch.  Only expert-TP
+mode (``expert_tp_axis``) still falls back to ``sort``.
 
 Tokens are sharded over EVERY mesh axis (the token axis is the product
 batch·seq flattened): each of the D·M devices routes its own T/(D·M)
@@ -114,25 +122,50 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
 
     # -- 2. dispatch plan (ONE sort; aux metrics reuse its counts) ----------
     dispatch = cfg.dispatch
-    if dispatch == "grouped" and (model_size > 1 or expert_tp_axis is not None):
-        dispatch = "sort"    # grouped expert-parallel a2a: roadmap item
+    if dispatch == "grouped" and expert_tp_axis is not None:
+        # expert TP gathers/reduce-scatters FIXED-shape (E_local, T, d)
+        # buffers over the f-sharded weights; the grouped path's ragged
+        # segments don't fit that collective pattern yet.
+        dispatch = "sort"
 
     if dispatch == "grouped":
-        # dropless: expert-sorted (T·K, d) buffer, no capacity, no drops;
+        # dropless: expert-sorted (T·K, d) buffer, no capacity padding;
         # the expert FFN runs as grouped/ragged matmuls over the segments.
         gplan = layout.plan_grouped(gate, E, drop_bucket=True)
         aux, metrics = balance.aux_losses(cfg, gate,
                                           expert_counts=gplan.counts)
         from repro.kernels import grouped_ffn as gffn
         from repro.kernels import ops as kops
-        if cfg.use_pallas_gate:
-            xs = kops.gather_rows(x, gplan.token)
+        gather = kops.gather_rows if cfg.use_pallas_gate else layout.take_rows
+        if model_size > 1:
+            # grouped AllToAll (dropless EP): the expert-sorted buffer is
+            # destination-rank-sorted too, so dispatch is one gather into
+            # the static (M, B, d) exchange layout; counts cross first so
+            # the receive side can rebuild its ragged offsets.
+            B = capacity.grouped_segment_bound(cfg, T, model_size)
+            eplan = layout.plan_grouped_ep(gplan, E, model_size, B)
+            packed = gather(x, eplan.pack_map).reshape(model_size, B, d)
+            recv, recv_counts = alltoall.grouped_all_to_all(
+                packed, eplan.send_counts, model_axis,
+                mode=cfg.a2a, inner=cfg.a2a_inner)
+            ffn_src, dst_map, group_sizes = layout.grouped_ep_receive_maps(
+                recv_counts, B)
+            xs = gather(recv.reshape(model_size * B, d), ffn_src)
         else:
-            xs = layout.dispatch_grouped(x, gplan)
+            xs = (gather(x, gplan.token) if cfg.use_pallas_gate
+                  else layout.dispatch_grouped(x, gplan))
+            group_sizes = gplan.counts
         ys = gffn.grouped_ffn(params, xs.astype(params["w_up"].dtype),
-                              gplan.counts, act,
+                              group_sizes, act,
                               use_pallas=cfg.use_pallas_gate,
                               interpret=kops.INTERPRET)
+        if model_size > 1:
+            # reverse path: expert-major FFN rows → exchange layout →
+            # AllToAll home → this rank's sorted rows → weighted combine
+            h = gather(ys, dst_map).reshape(model_size, B, d)
+            h = alltoall.all_to_all(h, model_axis, mode=cfg.a2a,
+                                    inner=cfg.a2a_inner)
+            ys = gather(h.reshape(model_size * B, d), eplan.back_map)
         y = layout.combine_grouped(ys, gplan, T)
         if pmean_axes:
             aux = lax.pmean(aux, pmean_axes)
@@ -258,8 +291,23 @@ def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
     params = {k: (v.astype(x.dtype) if k != "gate_w" else v)
               for k, v in params.items()}
 
+    if (cfg.a2a == "hierarchical" and cfg.a2a_inner > 1
+            and model_size > 1 and model_size % cfg.a2a_inner != 0):
+        raise ValueError(
+            f"MoEConfig.a2a='hierarchical' with a2a_inner={cfg.a2a_inner} "
+            f"does not divide the mesh {model_axis!r} axis size "
+            f"{model_size} — pick a2a_inner from its divisors or use "
+            f"a2a='flat'")
+
     tok_spec = P(axis_names)
-    tp = expert_tp_axis if expert_tp_axis in axis_names else None
+    tp = None
+    if expert_tp_axis is not None:
+        if expert_tp_axis not in axis_names:
+            # a typo'd axis must not silently disable expert TP
+            raise ValueError(
+                f"expert_tp_axis={expert_tp_axis!r} is not an axis of the "
+                f"mesh; valid axis names: {axis_names}")
+        tp = expert_tp_axis
     param_specs = {"gate_w": P(None, None),
                    "w_up": P(model_axis, None, tp),
                    "w_out": P(model_axis, tp, None)}

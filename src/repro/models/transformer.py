@@ -179,7 +179,18 @@ def _apply_attn_mlp(bp, shared, x, kind, cfg: ModelConfig, mesh, mode, cache,
     aux = jnp.zeros((), jnp.float32)
     h = layers.rms_norm(x, bp["ln2"], cfg.norm_eps)
     if kind == "moe":
-        tp = "data" if (mode == "decode" and use_expert_tp()) else None
+        # expert TP needs a data axis to shard f over; sharded_moe_apply
+        # rejects axes missing from the mesh rather than silently no-op'ing
+        tp = None
+        if mode == "decode" and use_expert_tp():
+            if "data" in mesh.axis_names:
+                tp = "data"
+            else:
+                import warnings
+                warnings.warn(
+                    f"expert TP requested (REPRO_EXPERT_TP) but mesh "
+                    f"{mesh.axis_names} has no 'data' axis — decoding "
+                    f"without expert tensor parallelism")
         y, aux, _ = moe_lib.sharded_moe_apply(
             mesh, cfg.moe, bp["moe"], h, num_experts=cfg.moe.num_experts,
             act=cfg.act, rng=rng, expert_tp_axis=tp)

@@ -31,3 +31,13 @@ def mesh8():
 def mesh_model8():
     from repro.launch.mesh import make_smoke_mesh
     return make_smoke_mesh((8,), ("model",))
+
+
+@pytest.fixture(scope="session")
+def mesh_ep4():
+    """4-way pure expert-parallel mesh on the forced 8-device CPU
+    backend — home of the grouped-EP ≡ sort ≡ dense equivalence tests
+    (model axis only, so every collective crosses expert-parallel
+    ranks; 4 ranks leaves room for hierarchical inner=2 × outer=2)."""
+    from repro.launch.mesh import make_smoke_mesh
+    return make_smoke_mesh((4,), ("model",))

@@ -77,3 +77,86 @@ def test_cost_model_message_aggregation():
     flat_bytes = G * (M - G) / M * B
     hier_bytes = G * (N - 1) / N * B
     assert abs(flat_bytes - hier_bytes) < 1e-6
+
+
+def test_hierarchical_inner_must_divide_axis(mesh_model8):
+    """Bad config fails loudly at trace time (no silent flat fallback,
+    no opaque reshape assert inside shard_map)."""
+    x = jax.random.normal(RNG, (64, 4, 8))
+    with pytest.raises(ValueError, match="a2a_inner"):
+        _run(mesh_model8, lambda v: alltoall.all_to_all(
+            v, "model", mode="hierarchical", inner=3))(x)
+    with pytest.raises(ValueError, match="outer"):
+        _run(mesh_model8, lambda v: alltoall.all_to_all(
+            v, "model", mode="hierarchical", inner=2, outer=3))(x)
+
+
+def test_bad_a2a_inner_rejected_by_config():
+    from repro.core.config import MoEConfig
+    with pytest.raises(ValueError, match="a2a_inner"):
+        MoEConfig(num_experts=8, a2a_inner=0)
+    with pytest.raises(ValueError, match="grouped_ep_bound_factor"):
+        MoEConfig(num_experts=8, grouped_ep_bound_factor=0.0)
+
+
+def test_bad_a2a_inner_rejected_by_moe_layer(mesh_model8):
+    """The MoE entry point names the config fields before tracing."""
+    from repro.core import moe
+    from repro.core.config import MoEConfig
+    cfg = MoEConfig(num_experts=8, gate="switch", a2a="hierarchical",
+                    a2a_inner=3)
+    p = moe.init_moe_params(RNG, cfg, 16, 32, 8, act="swiglu",
+                            dtype=jnp.float32)
+    x = jax.random.normal(RNG, (8, 4, 16))
+    with pytest.raises(ValueError, match="a2a_inner"):
+        moe.sharded_moe_apply(mesh_model8, cfg, p, x, num_experts=8,
+                              act="swiglu")
+
+
+# ---------------------------------------------------------------------------
+# grouped exchange (dropless EP): counts + bounded segments
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,inner", [("flat", 1), ("hierarchical", 2),
+                                        ("hierarchical", 4)])
+def test_grouped_a2a_counts_and_tokens_land_source_major(mesh_model8, mode,
+                                                         inner):
+    """recv chunk s on rank r == send chunk r on rank s, for both the
+    token payload and the count matrix, in every a2a mode."""
+    M, B, d, E_local = 8, 4, 16, 2
+    x = jax.random.normal(RNG, (M * M, B, d))          # per-device (M, B, d)
+    counts = jnp.arange(M * M * E_local, dtype=jnp.int32).reshape(
+        M * M, E_local)
+
+    def fn(v, c):
+        return alltoall.grouped_all_to_all(v, c, "model", mode=mode,
+                                           inner=inner)
+
+    recv_x, recv_c = jax.jit(shard_map(
+        fn, mesh=mesh_model8, in_specs=(P("model"), P("model")),
+        out_specs=(P("model"), P("model")), check_vma=False))(x, counts)
+    # global views: sender s's chunk for dest r is x[s*M + r]
+    rx = np.asarray(recv_x).reshape(M, M, B, d)        # [rank, src, ...]
+    rc = np.asarray(recv_c).reshape(M, M, E_local)
+    sx = np.asarray(x).reshape(M, M, B, d)             # [rank, dest, ...]
+    sc = np.asarray(counts).reshape(M, M, E_local)
+    for r in range(M):
+        for s in range(M):
+            np.testing.assert_array_equal(rx[r, s], sx[s, r])
+            np.testing.assert_array_equal(rc[r, s], sc[s, r])
+
+
+def test_grouped_a2a_gradient(mesh_model8):
+    x = jax.random.normal(RNG, (64, 4, 8))
+    counts = jnp.ones((64, 2), jnp.int32)
+
+    def loss(v):
+        out, _ = shard_map(
+            lambda u, c: alltoall.grouped_all_to_all(
+                u, c, "model", mode="hierarchical", inner=4),
+            mesh=mesh_model8, in_specs=(P("model"), P("model")),
+            out_specs=(P("model"), P("model")), check_vma=False)(v, counts)
+        return jnp.sum(out ** 2)
+
+    g = jax.jit(jax.grad(loss))(x)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(x), rtol=1e-6)

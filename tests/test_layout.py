@@ -102,3 +102,34 @@ def test_dropped_token_passes_through_residual():
     buf = layout.dispatch_scatter(x, plan, E, C)
     y = layout.combine_gather(buf, plan)
     assert np.allclose(np.asarray(y)[dropped], 0.0)
+
+
+def test_expert_capacity_aligned_for_tiny_decode_batch():
+    """Regression: the total-assignment clamp must not break the align-8
+    contract (T=4, K=1 used to return 4 — an unaligned (E, C, d) buffer
+    for the Pallas layout kernel)."""
+    cfg = MoEConfig(num_experts=8, gate="switch")
+    for T in (1, 2, 3, 4, 7):
+        C = capacity.expert_capacity(cfg, T, 8)
+        assert C % 8 == 0, (T, C)
+        assert C >= T            # clamp still bounds away from E·cf blowup
+    cfg2 = MoEConfig(num_experts=8, gate="topk", top_k=2,
+                     capacity_factor=64.0)
+    C = capacity.expert_capacity(cfg2, 4, 8)
+    assert C % 8 == 0 and C <= 8        # ceil(4·2/8)·8
+
+
+def test_grouped_segment_bound_static_and_aligned():
+    cfg = MoEConfig(num_experts=8, gate="topk", top_k=2)
+    # default: fully dropless — a rank can receive every assignment
+    assert capacity.grouped_segment_bound(cfg, 64, 4) == 128
+    # factor: balanced share × headroom, aligned, clamped at dropless
+    cfg_f = MoEConfig(num_experts=8, gate="topk", top_k=2,
+                      grouped_ep_bound_factor=1.5)
+    b = capacity.grouped_segment_bound(cfg_f, 64, 4)
+    assert b == 48 and b % 8 == 0       # ceil(128/4 · 1.5) = 48
+    big = MoEConfig(num_experts=8, gate="topk", top_k=2,
+                    grouped_ep_bound_factor=100.0)
+    assert capacity.grouped_segment_bound(big, 64, 4) == 128
+    # unaligned totals round the clamp up, preserving alignment
+    assert capacity.grouped_segment_bound(cfg, 3, 4) % 8 == 0

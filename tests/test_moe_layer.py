@@ -140,3 +140,13 @@ def test_expert_tp_equals_gathered(mesh8):
         expert_tp_axis="data"))(p, x)
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
                                rtol=1e-4, atol=1e-5)
+
+
+def test_expert_tp_typo_raises(mesh8):
+    """A typo'd expert_tp_axis must fail loudly, not silently disable TP."""
+    cfg = MoEConfig(num_experts=4, gate="switch", capacity_factor=4.0)
+    p = _params(cfg)
+    x = jax.random.normal(RNG, (8, 4, D))
+    with pytest.raises(ValueError, match="expert_tp_axis"):
+        moe.sharded_moe_apply(mesh8, cfg, p, x, num_experts=4, act="swiglu",
+                              expert_tp_axis="dataa")
