@@ -19,6 +19,14 @@ drop-rate column is the load-independent deliverable.
 AllToAll (count exchange + bounded segments) vs the capacity-padded
 sort exchange on a 4-way model mesh, flat and hierarchical — the
 composition of the paper's two-stage a2a with dropless dispatch.
+
+``run_bwd`` (the ``grouped_bwd`` suite) captures TRAINING-step cost,
+not just forward dispatch: value_and_grad over the expert FFN with the
+Pallas grouped kernels (forward + the dlhs/drhs backward kernels), the
+``lax.ragged_dot`` reference, and the capacity-padded sort-path
+``expert_ffn`` — the padded-FLOPs baseline the dropless backward beats
+on padding alone.  Registered in ``run.py --check`` so perf PRs can't
+skip the training-path numbers.
 """
 import jax
 import jax.numpy as jnp
@@ -128,5 +136,64 @@ def run_ep(paper: bool = False):
         emit(f"grouped/ep{EP_WAYS}/{mode}_{a2a}/S{S}", us, derived, **ratios)
 
 
+def run_bwd(paper: bool = False):
+    """fwd+bwd (value_and_grad) over the grouped expert FFN.
+
+    Segments come from a real switch routing of S tokens, so the ragged
+    structure matches what the layer sees; the padded baseline computes
+    E·C rows against the grouped paths' Σ n_e = S.  CPU caveats as
+    above: ragged_dot lowers serially and the Pallas kernels run in
+    interpret mode, so the RATIOS (pallas vs ragged, grouped vs padded
+    row counts) are the tracked signal, not absolute µs.
+    """
+    d, d_ff, E = (2048, 2048, 16) if paper else (256, 256, 16)
+    S = 4096 if paper else 512
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (S, d), jnp.float32)
+    cfg = MoEConfig(num_experts=E, gate="switch", capacity_factor=1.25)
+    params = moe.init_moe_params(key, cfg, d, d_ff, E, act="swiglu",
+                                 dtype=jnp.float32)
+    ffn_params = {k: v for k, v in params.items() if k != "gate_w"}
+    g = gating.route(cfg, gating.router_logits(cfg, x, params["gate_w"]))
+    gplan = layout.plan_grouped(g, E)
+    xs = layout.dispatch_grouped(x, gplan)
+    sizes = gplan.counts
+
+    from repro.kernels.grouped_ffn import grouped_ffn
+
+    def grouped_fn(use_pallas):
+        @jax.jit
+        def fn(p, xs):
+            def loss(p):
+                return jnp.sum(grouped_ffn(p, xs, sizes, "swiglu",
+                                           use_pallas=use_pallas) ** 2)
+            return jax.value_and_grad(loss)(p)
+        return fn
+
+    C = capacity.expert_capacity(cfg, S, E)
+    plan = layout.plan_sort(g, E, C)
+    buf = layout.dispatch_scatter(x, plan, E, C).reshape(E, C, d)
+
+    @jax.jit
+    def padded_fn(p, buf):
+        def loss(p):
+            return jnp.sum(moe.expert_ffn(p, buf, "swiglu") ** 2)
+        return jax.value_and_grad(loss)(p)
+
+    t_ragged = timeit(grouped_fn(False), ffn_params, xs)
+    t_pallas = timeit(grouped_fn(True), ffn_params, xs)
+    t_padded = timeit(padded_fn, ffn_params, buf)
+    emit(f"grouped/bwd/ragged/S{S}", t_ragged, f"rows={S}")
+    emit(f"grouped/bwd/pallas/S{S}", t_pallas,
+         f"fwd+dlhs+drhs kernels; vs_ragged={t_ragged / t_pallas:.2f}x",
+         vs_ragged=t_ragged / t_pallas)
+    emit(f"grouped/bwd/padded/S{S}", t_padded,
+         f"rows={E * C} (capacity-padded); "
+         f"vs_ragged={t_ragged / t_padded:.2f}x",
+         vs_ragged=t_ragged / t_padded,
+         padded_rows_ratio=E * C / S)
+
+
 if __name__ == "__main__":
     run()
+    run_bwd()

@@ -36,7 +36,7 @@ import pathlib  # noqa: E402
 import sys  # noqa: E402
 
 FIGS = {"topk": "3", "layout": "4", "alltoall": "7", "breakdown": "1",
-        "overall": "8", "grouped": "4+"}
+        "overall": "8", "grouped": "4+", "grouped_bwd": "4+ (train step)"}
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_moe.json"
 
@@ -151,8 +151,7 @@ def main() -> None:
     ap.add_argument("--paper", action="store_true",
                     help="paper-exact dims (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: topk,layout,alltoall,breakdown,"
-                         "overall,grouped")
+                    help="comma list of suites: " + ",".join(FIGS))
     ap.add_argument("--check", action="store_true",
                     help="diff against committed BENCH_moe.json instead of "
                          "rewriting it; exit 1 on regression")
@@ -163,10 +162,18 @@ def main() -> None:
     args = ap.parse_args()
     from benchmarks import (bench_alltoall, bench_breakdown, bench_grouped,
                             bench_layout, bench_overall, bench_topk)
-    mods = {"topk": bench_topk, "layout": bench_layout,
-            "alltoall": bench_alltoall, "breakdown": bench_breakdown,
-            "overall": bench_overall, "grouped": bench_grouped}
+    # suite name → run callable; grouped_bwd is the fwd+bwd training-path
+    # suite (bench_grouped.run_bwd) — part of the default list and thus
+    # of the --check regression gate, so perf PRs can't silently skip it
+    mods = {"topk": bench_topk.run, "layout": bench_layout.run,
+            "alltoall": bench_alltoall.run, "breakdown": bench_breakdown.run,
+            "overall": bench_overall.run, "grouped": bench_grouped.run,
+            "grouped_bwd": bench_grouped.run_bwd}
     wanted = args.only.split(",") if args.only else list(mods)
+    unknown = [w for w in wanted if w not in mods]
+    if unknown:
+        ap.error(f"unknown suite(s) {','.join(unknown)}; "
+                 f"available: {','.join(mods)}")
     if args.check and not JSON_PATH.exists():
         # fail before burning minutes of benchmarking on a setup error
         print(f"# --check: no {JSON_PATH} to diff against — run without "
@@ -180,7 +187,7 @@ def main() -> None:
             print(f"# --- {name} (paper fig {FIGS[name]}) ---")
             sys.stdout.flush()
             start = len(RESULTS)
-            mods[name].run(paper=args.paper)
+            mods[name](paper=args.paper)
             for r in RESULTS[start:]:       # tag for the JSON merge
                 r["suite"] = name
 

@@ -63,9 +63,13 @@ class MoEConfig:
     router_dtype: str = "float32"
     gumbel_temperature: float = 1.0        # for dense_to_sparse
     # Use the Pallas kernel paths end to end: fused top-k gate, blocked
-    # layout transform, and (grouped mode) the grouped-matmul FFN.  Off,
-    # the equivalent jnp/ragged_dot implementations run instead.
+    # layout transform, and (grouped mode) the grouped-matmul FFN —
+    # forward AND backward (kernels/grouped_ffn.py).  Off, the
+    # equivalent jnp/ragged_dot implementations run instead.
     use_pallas_gate: bool = False
+    # Row-block size for the grouped-matmul kernels (fwd, dlhs, drhs).
+    # None → the kernel default (kernels/grouped_ffn.DEFAULT_BLOCK_M).
+    grouped_block_m: Optional[int] = None
 
     def __post_init__(self):
         assert self.gate in GATE_STRATEGIES, self.gate
@@ -79,6 +83,10 @@ class MoEConfig:
             raise ValueError(
                 f"MoEConfig.grouped_ep_bound_factor must be positive or "
                 f"None, got {self.grouped_ep_bound_factor}")
+        if self.grouped_block_m is not None and self.grouped_block_m < 1:
+            raise ValueError(
+                f"MoEConfig.grouped_block_m must be >= 1 or None, got "
+                f"{self.grouped_block_m}")
 
 
 @dataclass(frozen=True)

@@ -98,10 +98,16 @@ def _gate_gshard(cfg: MoEConfig, logits, rng, token_ids):
     E = logits.shape[-1]
     i1 = jnp.argmax(probs, axis=-1)
     g1 = jnp.take_along_axis(probs, i1[:, None], axis=-1)[:, 0]
-    masked = jnp.where(jax.nn.one_hot(i1, E, dtype=bool), 0.0, probs)
+    first = jax.nn.one_hot(i1, E, dtype=bool)
+    masked = jnp.where(first, 0.0, probs)
     if rng is not None:
-        # GShard samples the 2nd expert proportionally to its prob.
-        i2 = jax.random.categorical(rng, jnp.log(masked + 1e-9), axis=-1)
+        # GShard samples the 2nd expert proportionally to its prob.  The
+        # 1st expert's slot must be -inf in log space: an additive floor
+        # (log(masked + eps)) leaves it samplable whenever the other
+        # probs are below eps — re-picking i1 with weight 0 in the
+        # denominator skew.
+        i2 = jax.random.categorical(
+            rng, jnp.where(first, -jnp.inf, jnp.log(probs + 1e-9)), axis=-1)
     else:
         i2 = jnp.argmax(masked, axis=-1)
     g2 = jnp.take_along_axis(masked, i2[:, None], axis=-1)[:, 0]

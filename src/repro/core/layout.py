@@ -45,6 +45,11 @@ M expert-parallel ranks, segment bound B):
                 + O(M·B) map arithmetic       2·M·B·d rows exchanged
                                               (vs sort-EP's 2·E·C·d),
                                               Σ n_e ragged FFN rows
+    grouped     none (reuses the fwd          dlhs: grouped matmul with
+    (backward)  offsets — NO fwd recompute)   rhsᵀ over Σ n_e rows;
+                                              drhs: Σ_e ceil(n_e/bm)
+                                              (K, N)-tile outer-product
+                                              accumulations in f32
     ==========  ============================  =========================
 
 The grouped-EP exchange pads to the segment bound B instead of the

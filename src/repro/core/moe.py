@@ -133,7 +133,8 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
         # the expert FFN runs as grouped/ragged matmuls over the segments.
         gplan = layout.plan_grouped(gate, E, drop_bucket=True)
         aux, metrics = balance.aux_losses(cfg, gate,
-                                          expert_counts=gplan.counts)
+                                          expert_counts=gplan.counts,
+                                          valid=valid, axes=pmean_axes)
         from repro.kernels import grouped_ffn as gffn
         from repro.kernels import ops as kops
         gather = kops.gather_rows if cfg.use_pallas_gate else layout.take_rows
@@ -158,7 +159,9 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
         ys = gffn.grouped_ffn(params, xs.astype(params["w_up"].dtype),
                               group_sizes, act,
                               use_pallas=cfg.use_pallas_gate,
-                              interpret=kops.INTERPRET)
+                              interpret=kops.INTERPRET,
+                              block_m=(cfg.grouped_block_m
+                                       or gffn.DEFAULT_BLOCK_M))
         if model_size > 1:
             # reverse path: expert-major FFN rows → exchange layout →
             # AllToAll home → this rank's sorted rows → weighted combine
@@ -186,7 +189,8 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
     else:
         plan = layout.plan_cumsum(gate, E, C, drop_bucket=True)
         buf = layout.dispatch_dense(x, plan, E, C)
-    aux, metrics = balance.aux_losses(cfg, gate, expert_counts=plan.counts)
+    aux, metrics = balance.aux_losses(cfg, gate, expert_counts=plan.counts,
+                                      valid=valid, axes=pmean_axes)
 
     # -- 3. AllToAll (dispatch) ---------------------------------------------
     if model_size > 1:
@@ -278,6 +282,13 @@ def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
     valid = (jnp.arange(toks.shape[0]) < n_real)
     if token_ids is not None:
         tid, _ = _pad_to(token_ids.reshape(-1), n_dev)
+    elif cfg.gate == "hash":
+        # the zeros placeholder below would hash EVERY token to the same
+        # bucket — one expert takes all load and _gate_hash never notices
+        raise ValueError(
+            "cfg.gate='hash' routes by token id: pass token_ids to "
+            "sharded_moe_apply (the zeros fallback would silently send "
+            "every token to one expert)")
     else:
         tid = jnp.zeros((toks.shape[0],), jnp.int32)
 

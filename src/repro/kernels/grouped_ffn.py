@@ -6,7 +6,7 @@ FFN then needs ``y[offs[e]:offs[e+1]] = x[offs[e]:offs[e+1]] @ w[e]`` —
 a grouped matmul (MegaBlocks' dMoE primitive).  Two implementations:
 
 ``ragged``  ``jax.lax.ragged_dot`` — XLA's native ragged primitive, used
-            as the jnp reference path and for the VJP.
+            as the jnp reference path.
 ``pallas``  Blocked kernel: grid ``(M/block_m, E)``; each row-block visits
             each expert, but a ``pl.when`` predicate skips (expert,
             block) pairs whose row ranges don't overlap — with sorted
@@ -18,8 +18,19 @@ a grouped matmul (MegaBlocks' dMoE primitive).  Two implementations:
 Rows past ``offsets[-1]`` (the virtual drop bucket's tail under token
 padding) belong to no expert and come out zero — matching ragged_dot.
 
-The Pallas forward carries a ``custom_vjp`` whose backward delegates to
-``ragged_dot``'s differentiation rule, so the grouped mode trains.
+The ``custom_vjp`` backward is kernelized too (MegaBlocks trains the
+dMoE primitive in both directions) — no forward recompute, both
+gradients straight off the residuals:
+
+  dlhs  the SAME blocked grouped-matmul kernel with ``rhs`` transposed
+        on its last two dims (the ``transpose_rhs`` flag — a tile-level
+        transpose in-kernel, no HBM copy of the expert weights):
+        ``dlhs[seg_e] = g[seg_e] @ rhs[e]ᵀ``.
+  drhs  a segment-wise outer-product accumulation kernel: grid
+        ``(E, M/block_m)``, the scalar-prefetched offsets predicate
+        which row-blocks contribute to expert e's ``(K, N)`` gradient
+        tile, masked rows zeroed, partial products accumulated in f32
+        (``drhs[e] = lhs[seg_e]ᵀ @ g[seg_e]``).
 """
 from __future__ import annotations
 
@@ -36,7 +47,7 @@ DEFAULT_BLOCK_M = 128
 
 
 def _grouped_matmul_kernel(offs_ref, lhs_ref, rhs_ref, out_ref, *,
-                           block_m: int):
+                           block_m: int, transpose_rhs: bool):
     i, e = pl.program_id(0), pl.program_id(1)
 
     @pl.when(e == 0)
@@ -51,38 +62,105 @@ def _grouped_matmul_kernel(offs_ref, lhs_ref, rhs_ref, out_ref, *,
         rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_m, 1), 0)
         mask = (rows >= lo) & (rows < hi)
         x = jnp.where(mask, lhs_ref[...], 0)
+        # transpose_rhs serves the dlhs backward: the (K, N) tile is
+        # transposed in-register, so the caller never materializes an
+        # (E, N, K) copy of the expert weights in HBM
+        w = rhs_ref[0].T if transpose_rhs else rhs_ref[0]
         # out_ref is f32 regardless of input dtype: partial sums must not
         # round to bf16 (the sort path's einsum accumulates f32 too)
-        out_ref[...] += jnp.dot(x, rhs_ref[0],
-                                preferred_element_type=jnp.float32)
+        out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "block_m", "transpose_rhs"))
 def _grouped_matmul_impl(lhs: jax.Array, rhs: jax.Array, offsets: jax.Array,
                          *, interpret: bool = True,
-                         block_m: int = DEFAULT_BLOCK_M) -> jax.Array:
-    M, K = lhs.shape
-    E, _, N = rhs.shape
+                         block_m: int = DEFAULT_BLOCK_M,
+                         transpose_rhs: bool = False) -> jax.Array:
+    """y[seg_e] = lhs[seg_e] @ rhs[e] — or @ rhs[e].T with
+    ``transpose_rhs`` (the dlhs backward; lhs is then (M, N) → (M, K))."""
+    M, _ = lhs.shape
+    E, K, N = rhs.shape
+    n_out = K if transpose_rhs else N
     bm = min(block_m, M)
     pad = (-M) % bm
     if pad:
-        lhs = jnp.concatenate([lhs, jnp.zeros((pad, K), lhs.dtype)])
+        lhs = jnp.concatenate(
+            [lhs, jnp.zeros((pad, lhs.shape[1]), lhs.dtype)])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=((M + pad) // bm, E),
         in_specs=[
-            pl.BlockSpec((bm, K), lambda i, e, offs: (i, 0)),
+            pl.BlockSpec((bm, lhs.shape[1]), lambda i, e, offs: (i, 0)),
             pl.BlockSpec((1, K, N), lambda i, e, offs: (e, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, N), lambda i, e, offs: (i, 0)),
+        out_specs=pl.BlockSpec((bm, n_out), lambda i, e, offs: (i, 0)),
     )
     out = pl.pallas_call(
-        functools.partial(_grouped_matmul_kernel, block_m=bm),
+        functools.partial(_grouped_matmul_kernel, block_m=bm,
+                          transpose_rhs=transpose_rhs),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M + pad, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((M + pad, n_out), jnp.float32),
         interpret=interpret,
     )(offsets.astype(jnp.int32), lhs, rhs)
     return (out[:M] if pad else out).astype(lhs.dtype)
+
+
+def _grouped_drhs_kernel(offs_ref, lhs_ref, g_ref, out_ref, *,
+                         block_m: int):
+    e, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row0 = i * block_m
+    lo, hi = offs_ref[e], offs_ref[e + 1]
+
+    @pl.when(jnp.logical_and(hi > row0, lo < row0 + block_m))
+    def _tile():
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_m, 1), 0)
+        mask = (rows >= lo) & (rows < hi)
+        # masking ONE operand suffices: rows outside [lo, hi) — including
+        # the virtual drop bucket's tail — contribute a zero outer product
+        x = jnp.where(mask, lhs_ref[...], 0)
+        out_ref[0] += jnp.dot(x.T, g_ref[...],
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
+def _grouped_drhs_impl(lhs: jax.Array, g: jax.Array, offsets: jax.Array,
+                       *, interpret: bool = True,
+                       block_m: int = DEFAULT_BLOCK_M) -> jax.Array:
+    """drhs (E, K, N) f32 with drhs[e] = lhs[seg_e].T @ g[seg_e].
+
+    Grid (E, M/block_m): expert-major so each expert's (K, N) output
+    tile stays resident while its row-blocks accumulate into it; the
+    offsets predicate skips blocks outside [offs[e], offs[e+1]).
+    """
+    M, K = lhs.shape
+    _, N = g.shape
+    E = offsets.shape[0] - 1
+    bm = min(block_m, M)
+    pad = (-M) % bm
+    if pad:
+        lhs = jnp.concatenate([lhs, jnp.zeros((pad, K), lhs.dtype)])
+        g = jnp.concatenate([g, jnp.zeros((pad, N), g.dtype)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(E, (M + pad) // bm),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda e, i, offs: (i, 0)),
+            pl.BlockSpec((bm, N), lambda e, i, offs: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, N), lambda e, i, offs: (e, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_grouped_drhs_kernel, block_m=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, K, N), jnp.float32),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), lhs, g)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
@@ -102,17 +180,23 @@ def _grouped_fwd(lhs, rhs, group_sizes, interpret, block_m):
                             jnp.cumsum(group_sizes).astype(jnp.int32)])
     out = _grouped_matmul_impl(lhs, rhs, offs, interpret=interpret,
                                block_m=block_m)
-    return out, (lhs, rhs, group_sizes)
+    return out, (lhs, rhs, offs)
 
 
 def _grouped_bwd(interpret, block_m, res, g):
-    # ragged_dot owns the transpose rule; the Pallas kernel only replaces
-    # the forward.  (A Pallas backward is a follow-up: dlhs is the same
-    # grouped matmul with rhs transposed; drhs a segment-wise outer sum.)
-    lhs, rhs, group_sizes = res
-    _, vjp = jax.vjp(lambda l, r: lax.ragged_dot(l, r, group_sizes), lhs, rhs)
-    dl, dr = vjp(g)
-    return dl, dr, None
+    # Both gradients are Pallas kernels off the residuals — NO forward
+    # recompute (the old path re-ran the whole forward through jax.vjp of
+    # ragged_dot just to reach its transpose rule):
+    #   dlhs[seg_e] = g[seg_e] @ rhs[e]ᵀ  — the forward kernel with its
+    #                                       (K, N) tile transposed in-kernel
+    #   drhs[e]     = lhs[seg_e]ᵀ @ g[seg_e]  — segment outer-product sum
+    lhs, rhs, offs = res
+    g = g.astype(lhs.dtype)
+    dlhs = _grouped_matmul_impl(g, rhs, offs, transpose_rhs=True,
+                                interpret=interpret, block_m=block_m)
+    drhs = _grouped_drhs_impl(lhs, g, offs,
+                              interpret=interpret, block_m=block_m)
+    return dlhs.astype(lhs.dtype), drhs.astype(rhs.dtype), None
 
 
 grouped_matmul.defvjp(_grouped_fwd, _grouped_bwd)

@@ -74,6 +74,22 @@ def test_gshard_weights_normalized_and_distinct():
                                1.0, rtol=1e-4)
 
 
+def test_gshard_stochastic_second_never_repeats_first():
+    """Regression: the old additive-eps log mask (log(masked + 1e-9))
+    left the 1st expert's zeroed slot samplable whenever the other probs
+    fell below eps — here p(i1) ≈ 1, so the categorical was near-uniform
+    over ALL experts including i1 (~1/E re-pick rate per row).  The -inf
+    mask makes re-picking impossible on every draw."""
+    E = 8
+    cfg = MoEConfig(num_experts=E, gate="gshard")
+    # one dominant expert per row → all other probs ≈ 4e-18 ≪ 1e-9
+    logits = jnp.zeros((256, E)).at[:, 3].set(40.0)
+    for seed in range(20):
+        out = gating.route(cfg, logits, rng=jax.random.PRNGKey(seed))
+        assert bool(jnp.all(out.expert_index[:, 0] != out.expert_index[:, 1]))
+        assert bool(jnp.all(jnp.isfinite(out.combine_weights)))
+
+
 def test_ktop1_one_expert_per_prototype():
     P = 4
     cfg = MoEConfig(num_experts=16, gate="ktop1", num_prototypes=P)

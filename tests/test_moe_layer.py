@@ -142,6 +142,64 @@ def test_expert_tp_equals_gathered(mesh8):
                                rtol=1e-4, atol=1e-5)
 
 
+def test_hash_gate_requires_token_ids(mesh8):
+    """Without token_ids the wrapper used to substitute zeros — every
+    token hashed to one bucket and the hash gate silently degenerated to
+    a single expert.  Now it must fail loudly."""
+    cfg = MoEConfig(num_experts=8, gate="hash")
+    p = _params(cfg)
+    x = jax.random.normal(RNG, (4, 8, D))
+    with pytest.raises(ValueError, match="token_ids"):
+        moe.sharded_moe_apply(mesh8, cfg, p, x, num_experts=8, act="swiglu")
+    # with real ids the layer runs and spreads load over several buckets
+    tid = jnp.arange(32).reshape(4, 8)
+    y, aux, m = jax.jit(lambda p, v, t: moe.sharded_moe_apply(
+        mesh8, cfg, p, v, num_experts=8, act="swiglu", token_ids=t))(p, x, tid)
+    assert y.shape == x.shape
+    assert float(m["expert_load_max"]) < 1.0
+
+
+@pytest.mark.parametrize("dispatch", ["sort", "grouped"])
+def test_aux_losses_ignore_padded_tokens(dispatch):
+    """A padded batch (decode-style T % n_dev != 0) must report the SAME
+    aux losses and router metrics as its unpadded twin: the virtual-expert
+    rows used to inflate the z-loss (logsumexp(0)² = log(E)² each) and
+    deflate the load-balance means."""
+    cfg = MoEConfig(num_experts=8, gate="switch", capacity_factor=8.0,
+                    dispatch=dispatch, router_z_loss_weight=1e-3)
+    p = _params(cfg)
+    T, pad = 56, 8
+    x = jax.random.normal(RNG, (T, D))
+    xp = jnp.concatenate([x, jnp.zeros((pad, D))])
+    valid = jnp.arange(T + pad) < T
+    y, aux, m = moe.moe_block_local(cfg, p, x, num_experts=8, act="swiglu")
+    yp, auxp, mp = moe.moe_block_local(cfg, p, xp, num_experts=8,
+                                       act="swiglu", valid=valid)
+    np.testing.assert_allclose(float(auxp), float(aux), rtol=1e-6)
+    for k in m:
+        np.testing.assert_allclose(float(mp[k]), float(m[k]),
+                                   rtol=1e-6, err_msg=k)
+    np.testing.assert_allclose(np.asarray(yp[:T]), np.asarray(y),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_aux_losses_ignore_padding_under_sharding(mesh1, mesh8):
+    """T=57 on 8 devices pads 7 rows onto the LAST shard: per-shard
+    masked means pmean'd would weight that shard's 1 valid token like a
+    full shard of 8.  The (sum, count) psum aggregation makes the
+    sharded lb/z-loss exactly the unsharded 57-token values."""
+    cfg = MoEConfig(num_experts=8, gate="switch", capacity_factor=8.0,
+                    router_z_loss_weight=1e-3)
+    p = _params(cfg)
+    x = jax.random.normal(RNG, (57, D))
+    _, aux1, m1 = _apply(mesh1, cfg, p, x)
+    _, aux8, m8 = _apply(mesh8, cfg, p, x)
+    np.testing.assert_allclose(float(aux8), float(aux1), rtol=1e-5)
+    for k in ("load_balance_loss", "router_z_loss"):
+        np.testing.assert_allclose(float(m8[k]), float(m1[k]),
+                                   rtol=1e-5, err_msg=k)
+
+
 def test_expert_tp_typo_raises(mesh8):
     """A typo'd expert_tp_axis must fail loudly, not silently disable TP."""
     cfg = MoEConfig(num_experts=4, gate="switch", capacity_factor=4.0)
