@@ -20,6 +20,12 @@ AllToAll (count exchange + bounded segments) vs the capacity-padded
 sort exchange on a 4-way model mesh, flat and hierarchical — the
 composition of the paper's two-stage a2a with dropless dispatch.
 
+``run_tp`` (the ``grouped/tp/*`` entries) adds expert TENSOR
+parallelism on top: a (data=2, model=4) mesh with the expert weights'
+f dim sharded over ``data`` — the ragged-aware TP all-gather /
+psum_scatter pair around the grouped matmuls vs the fixed-shape
+sort-TP pair, across the same a2a matrix.
+
 ``run_bwd`` (the ``grouped_bwd`` suite) captures TRAINING-step cost,
 not just forward dispatch: value_and_grad over the expert FFN with the
 Pallas grouped kernels (forward + the dlhs/drhs backward kernels), the
@@ -81,26 +87,32 @@ def run(paper: bool = False):
              sort_drop_rate=drop)
 
     run_ep(paper=paper)
+    run_tp(paper=paper)
 
 
-def run_ep(paper: bool = False):
-    """Expert-parallel grouped dispatch: the grouped AllToAll (count
-    exchange + bounded segments) vs the capacity-padded sort exchange on
-    an EP_WAYS-way 'model' mesh, flat and hierarchical.  Absolute µs are
-    fake-device CPU numbers; the grouped-vs-sort and hier-vs-flat RATIOS
-    are the tracked deliverables."""
-    if len(jax.devices()) < EP_WAYS:
+TP_MESH = (2, 4)        # (data=TP, model=EP) — data carries the f slices
+
+
+def _run_sharded_matrix(mesh_shape, mesh_axes, tp_axis, key_tag, tag,
+                        paper: bool):
+    """Shared body of ``run_ep``/``run_tp``: time the full MoE layer for
+    the {sort, grouped} × {flat, hierarchical} matrix on the given mesh
+    (optionally with expert TP over ``tp_axis``) and emit one entry per
+    cell with the grouped-vs-sort / hier-vs-flat ratios."""
+    import numpy as np
+    n_dev = int(np.prod(mesh_shape))
+    if len(jax.devices()) < n_dev:
         # run.py only setdefault()s XLA_FLAGS — a preexisting value in the
         # shell leaves 1 device.  write_json carries the committed
-        # grouped/ep4/* entries over un-refreshed; say why.
-        print(f"# WARNING: grouped/ep{EP_WAYS} SKIPPED — "
-              f"{len(jax.devices())} device(s) < {EP_WAYS}; committed "
-              f"grouped/ep{EP_WAYS}/* entries will NOT be refreshed "
+        # grouped/<key_tag>/* entries over un-refreshed; say why.
+        print(f"# WARNING: grouped/{key_tag} SKIPPED — "
+              f"{len(jax.devices())} device(s) < {n_dev}; committed "
+              f"grouped/{key_tag}/* entries will NOT be refreshed "
               f"(unset XLA_FLAGS or include "
               f"--xla_force_host_platform_device_count=8)")
         return
     from repro.launch.mesh import make_smoke_mesh
-    mesh = make_smoke_mesh((EP_WAYS,), ("model",))
+    mesh = make_smoke_mesh(mesh_shape, mesh_axes)
     d, d_ff, E = (512, 512, 16) if paper else (128, 128, 16)
     S = 2048 if paper else 512
     key = jax.random.PRNGKey(0)
@@ -113,7 +125,8 @@ def run_ep(paper: bool = False):
         @jax.jit
         def fn(p, v):
             y, _, _ = moe.sharded_moe_apply(mesh, cfg, p, v,
-                                            num_experts=E, act="relu")
+                                            num_experts=E, act="relu",
+                                            expert_tp_axis=tp_axis)
             return y
         return fn
 
@@ -126,14 +139,36 @@ def run_ep(paper: bool = False):
 
     for (mode, a2a), us in t.items():
         ratios = {}
-        derived = f"ep{EP_WAYS}"
+        derived = tag
         if mode == "grouped":
             ratios["vs_sort"] = t[("sort", a2a)] / us
             derived += f"; vs_sort={ratios['vs_sort']:.2f}x"
         if a2a == "hierarchical":
             ratios["vs_flat"] = t[(mode, "flat")] / us
             derived += f"; vs_flat={ratios['vs_flat']:.2f}x"
-        emit(f"grouped/ep{EP_WAYS}/{mode}_{a2a}/S{S}", us, derived, **ratios)
+        emit(f"grouped/{key_tag}/{mode}_{a2a}/S{S}", us, derived, **ratios)
+
+
+def run_ep(paper: bool = False):
+    """Expert-parallel grouped dispatch: the grouped AllToAll (count
+    exchange + bounded segments) vs the capacity-padded sort exchange on
+    an EP_WAYS-way 'model' mesh, flat and hierarchical.  Absolute µs are
+    fake-device CPU numbers; the grouped-vs-sort and hier-vs-flat RATIOS
+    are the tracked deliverables."""
+    _run_sharded_matrix((EP_WAYS,), ("model",), None,
+                        f"ep{EP_WAYS}", f"ep{EP_WAYS}", paper)
+
+
+def run_tp(paper: bool = False):
+    """Expert-TP × grouped-EP (the composition the old code forfeited by
+    rewriting grouped+TP to sort): full-layer time with the expert
+    weights' f dim sharded over ``data`` while experts shard over
+    ``model``, for the whole dispatch × a2a matrix.  The grouped-vs-sort
+    and hier-vs-flat RATIOS under TP are the tracked deliverables (on
+    TPU the grouped-TP path additionally wins the capacity-padding
+    FLOPs back — see core/layout.py's cost model)."""
+    _run_sharded_matrix(TP_MESH, ("data", "model"), "data",
+                        "tp", f"tp{TP_MESH[0]}xep{TP_MESH[1]}", paper)
 
 
 def run_bwd(paper: bool = False):

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.config import A2A_MODES
+
 
 def flat_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     """Vanilla AllToAll over the full named axis (NCCL-equivalent)."""
@@ -85,10 +87,17 @@ def all_to_all(x: jax.Array, axis_name: str, *, mode: str = "flat",
     exactly: a silent floor (``outer = M // inner``) would either quietly
     run flat (inner > M) or trip an opaque reshape assert deep inside the
     ``shard_map`` trace (outer·inner != M).  Validated up front instead.
+
+    An unknown ``mode`` is a config error and raises whatever ``inner``
+    is — previously it silently ran flat when ``inner <= 1`` and died on
+    a bare ``assert`` otherwise.
     """
+    if mode not in A2A_MODES:
+        raise ValueError(
+            f"all_to_all: unknown mode {mode!r} (MoEConfig.a2a); valid "
+            f"modes: {A2A_MODES}")
     if mode == "flat" or inner <= 1:
         return flat_all_to_all(x, axis_name)
-    assert mode == "hierarchical", mode
     M = x.shape[0]
     if M % inner != 0:
         raise ValueError(

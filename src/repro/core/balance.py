@@ -10,6 +10,15 @@ from jax import lax
 from repro.core.config import MoEConfig
 from repro.core.gating import GateOutput
 
+# THE canonical router-metric key list.  ``aux_losses`` returns exactly
+# these keys (zipped strictly against the values it computes), and
+# ``moe.sharded_moe_apply`` builds its shard_map metric out_specs from
+# this tuple — add a metric here (and its value in ``aux_losses``) and
+# every consumer stays in sync; duplicating the names at the shard_map
+# boundary produced an opaque pytree-mismatch error instead.
+METRIC_KEYS = ("load_balance_loss", "router_z_loss",
+               "expert_load_max", "expert_load_min")
+
 
 def _masked_mean(x: jax.Array, valid: Optional[jax.Array],
                  axes: Tuple[str, ...] = ()) -> jax.Array:
@@ -89,10 +98,10 @@ def aux_losses(cfg: MoEConfig, gate: GateOutput,
     else:
         counts = jnp.sum(
             jax.nn.one_hot(gate.expert_index, E, dtype=jnp.float32), axis=(0, 1))
-    metrics = {
-        "load_balance_loss": lb,
-        "router_z_loss": zl,
-        "expert_load_max": jnp.max(counts) / jnp.maximum(jnp.sum(counts), 1.0),
-        "expert_load_min": jnp.min(counts) / jnp.maximum(jnp.sum(counts), 1.0),
-    }
+    total = jnp.maximum(jnp.sum(counts), 1.0)
+    # zip(strict=True) raises even under ``python -O`` if a metric is
+    # added to one side but not the other
+    metrics = dict(zip(METRIC_KEYS,
+                       (lb, zl, jnp.max(counts) / total,
+                        jnp.min(counts) / total), strict=True))
     return loss, metrics

@@ -59,3 +59,23 @@ def grouped_segment_bound(cfg: MoEConfig, num_tokens: int, model_size: int,
         return dropless
     b = max(align, _round_up(math.ceil(total / model_size * f), align))
     return min(b, dropless)
+
+
+def grouped_tp_gather_bound(cfg: MoEConfig, num_tokens: int) -> int:
+    """Static per-TP-rank row bound for the grouped expert-TP all-gather
+    WITHOUT expert parallelism: B = T·K, the full expert-sorted buffer
+    gathered as-is (no packing step, no padding rows beyond the
+    routing's own virtual-bucket tail).
+
+    The expert-TP path gathers every TP rank's bounded expert-sorted
+    segments into one ``(R·B, d)`` buffer whose chunk boundaries all
+    ranks must agree on — a rank deriving a different B would desync the
+    gathered layout (rank r's rows landing where rank r+1 expects its
+    own).  Agreement holds because B is a pure function of the config
+    and the STATIC per-shard token count (tokens shard evenly over the
+    mesh, so ``num_tokens`` is the same Python int on every TP rank).
+    Under grouped-EP the TP gather operates on the EP exchange layout
+    instead, so its bound IS :func:`grouped_segment_bound` — same
+    agreement argument, same static inputs.
+    """
+    return num_tokens * gating.gate_k(cfg)

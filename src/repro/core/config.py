@@ -32,8 +32,9 @@ A2A_MODES = ("flat", "hierarchical")
 #           matmuls (MegaBlocks-style).  Under expert parallelism
 #           (model_size > 1) the grouped AllToAll exchanges per-expert
 #           counts then bounded token segments (core/alltoall.py,
-#           core/layout.py GroupedEPPlan); only expert-TP mode still
-#           falls back to "sort".
+#           core/layout.py GroupedEPPlan); under expert TP the bounded
+#           chunks + counts all-gather over the TP axis and each rank
+#           runs its f-slice (core/layout.py grouped_tp_gather_maps).
 DISPATCH_MODES = ("sort", "dense", "grouped")
 
 
@@ -72,9 +73,20 @@ class MoEConfig:
     grouped_block_m: Optional[int] = None
 
     def __post_init__(self):
-        assert self.gate in GATE_STRATEGIES, self.gate
-        assert self.a2a in A2A_MODES, self.a2a
-        assert self.dispatch in DISPATCH_MODES, self.dispatch
+        # real exceptions, not asserts: these must survive ``python -O``
+        # (a stripped assert let a typo'd mode reach deep collective code)
+        if self.gate not in GATE_STRATEGIES:
+            raise ValueError(
+                f"MoEConfig.gate={self.gate!r} is not a known gating "
+                f"strategy; valid options: {GATE_STRATEGIES}")
+        if self.a2a not in A2A_MODES:
+            raise ValueError(
+                f"MoEConfig.a2a={self.a2a!r} is not a known AllToAll "
+                f"mode; valid options: {A2A_MODES}")
+        if self.dispatch not in DISPATCH_MODES:
+            raise ValueError(
+                f"MoEConfig.dispatch={self.dispatch!r} is not a known "
+                f"dispatch mode; valid options: {DISPATCH_MODES}")
         if self.a2a_inner < 1:
             raise ValueError(
                 f"MoEConfig.a2a_inner must be >= 1, got {self.a2a_inner}")

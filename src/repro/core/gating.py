@@ -217,13 +217,23 @@ _GATES = {
 
 
 def gate_k(cfg: MoEConfig) -> int:
-    """Static number of assignment slots per token for a strategy."""
+    """Static number of assignment slots per token for a strategy.
+
+    This is THE contract the capacity/bound sizing and the dispatch
+    plans build on: it must equal the K that ``route()`` actually
+    emits.  For ``sam`` that means the same clamp ``_gate_sam`` applies
+    — top-k runs INSIDE the chosen group, so a ``top_k`` above the
+    group width E/G yields E/G slots, not ``top_k`` (returning the raw
+    ``top_k`` tripped ``route()``'s shape assert and over-sized
+    ``expert_capacity``/``grouped_segment_bound``)."""
     if cfg.gate in ("switch", "base", "hash"):
         return 1
     if cfg.gate == "gshard":
         return 2
     if cfg.gate == "ktop1":
         return cfg.num_prototypes
+    if cfg.gate == "sam":
+        return min(cfg.top_k, cfg.num_experts // cfg.num_groups)
     return cfg.top_k
 
 

@@ -30,6 +30,13 @@ dispatch modes, selected by ``MoEConfig.dispatch``:
             receive side rebuilds expert-major offsets from the counts
             and runs the same ragged matmuls (:class:`GroupedEPPlan`,
             :func:`plan_grouped_ep`, :func:`grouped_ep_receive_maps`).
+            Under expert TENSOR parallelism the bounded chunks and their
+            counts are additionally all-gathered over the TP axis and
+            the same offset arithmetic merges them into one expert-major
+            order every TP rank agrees on (:func:`grouped_tp_gather_maps`)
+            — each rank then runs the ragged matmuls over its f-slice of
+            the expert weights and a psum_scatter returns the reduced
+            token rows.
 
 Cost model (per device, S tokens, K slots, E experts, capacity C,
 M expert-parallel ranks, segment bound B):
@@ -45,6 +52,13 @@ M expert-parallel ranks, segment bound B):
                 + O(M·B) map arithmetic       2·M·B·d rows exchanged
                                               (vs sort-EP's 2·E·C·d),
                                               Σ n_e ragged FFN rows
+    grouped-TP  no extra sort (reuses the     all-gather R·B·d rows +
+    (R ranks)   per-rank chunks); O(R·M·B)    R·M·E/M count ints, psum-
+                map arithmetic off the        scatter R·B·d back; FFN is
+                gathered count matrix         Σ_r Σ_e n_e^(r) rows ×
+                                              the f/R weight slice —
+                                              R× rows · 1/R width = the
+                                              unsharded FLOP total
     grouped     none (reuses the fwd          dlhs: grouped matmul with
     (backward)  offsets — NO fwd recompute)   rhsᵀ over Σ n_e rows;
                                               drhs: Σ_e ceil(n_e/bm)
@@ -341,6 +355,30 @@ def grouped_ep_receive_maps(recv_counts: jax.Array, bound: int):
     ffn_src = ffn_src.at[jnp.where(dst_map >= 0, dst_map, M * B)].set(
         jnp.arange(M * B, dtype=jnp.int32), mode="drop")
     return ffn_src, dst_map, group_sizes
+
+
+def grouped_tp_gather_maps(counts: jax.Array, bound: int):
+    """Expert-TP twin of :func:`grouped_ep_receive_maps`.
+
+    The grouped expert-TP path all-gathers each TP rank's bounded
+    expert-sorted buffer (single-rank: the ``(T·K, d)`` sorted buffer
+    itself; under grouped-EP: the received ``(M·B, d)`` exchange
+    layout) plus its per-chunk count matrix.  ``counts`` therefore
+    arrives as ``(R, E)`` or ``(R, M, E_local)`` — R the TP degree —
+    and every chunk of the gathered buffer satisfies the receive-map
+    contract already: expert-sorted within the chunk, live rows packed
+    from row 0, at most ``bound`` of them.  Flattening the leading dims
+    to ``(R·M, E_local)`` source chunks makes the SAME offset
+    arithmetic rebuild the expert-major FFN order across TP ranks — no
+    new sort, no new collective beyond the gather itself.
+
+    Every TP rank computes these maps from the identical gathered count
+    matrix, so all ranks agree on the segment structure and each can run
+    its f-slice of the grouped matmuls over the same row order (the
+    f-contraction is then reduced by the caller's ``psum_scatter``).
+    """
+    return grouped_ep_receive_maps(
+        counts.reshape(-1, counts.shape[-1]), bound)
 
 
 # ---------------------------------------------------------------------------

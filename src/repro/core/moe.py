@@ -19,8 +19,12 @@ destination rank's rows packed to a static segment bound B
 the receive side rebuilds expert-major offsets from the counts and
 feeds the same ragged matmuls, and the combine reverses the path.
 Both a2a modes (flat / hierarchical) carry the token payload, so the
-paper's two-stage win composes with dropless dispatch.  Only expert-TP
-mode (``expert_tp_axis``) still falls back to ``sort``.
+paper's two-stage win composes with dropless dispatch.  Expert-TP mode
+(``expert_tp_axis``) composes too: the bounded expert-sorted chunks and
+their counts are all-gathered over the TP axis into one expert-major
+order every TP rank agrees on, each rank runs the grouped matmuls over
+its f-slice of the expert weights, and a psum_scatter returns the
+f-reduced token rows — see ``moe_block_local``.
 
 Tokens are sharded over EVERY mesh axis (the token axis is the product
 batch·seq flattened): each of the D·M devices routes its own T/(D·M)
@@ -105,7 +109,20 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
                     expert_tp_axis: Optional[str] = None,
                     ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
     """x: (T_local, d) → (y, aux_loss, metrics).  ``params`` hold LOCAL
-    expert shards: w_up/w_gate/w_out have leading dim E_local."""
+    expert shards: w_up/w_gate/w_out have leading dim E_local (and, with
+    ``expert_tp_axis`` set, a 1/R slice of the f dim, R the TP degree).
+
+    Expert-TP ``dispatch="grouped"`` (the ragged-aware TP composition —
+    no more silent rewrite to ``"sort"``): the per-rank bounded
+    expert-sorted chunks and their count matrices are all-gathered over
+    the TP axis, :func:`repro.core.layout.grouped_tp_gather_maps`
+    rebuilds ONE expert-major row order every TP rank agrees on, each
+    rank runs the grouped/ragged matmuls over its f-slice (swiglu/geglu
+    are elementwise in f, so the up/gate slices compose locally), and a
+    tiled ``psum_scatter`` over the token rows hands each rank back its
+    own chunk with the f-contraction reduced.  Composes with grouped-EP:
+    there the gathered chunks are the (M·B, d) exchange layouts, so the
+    return AllToAll runs on the already-reduced rows unchanged."""
     T, d = x.shape
     E = num_experts
     E_local = E // model_size
@@ -122,11 +139,7 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
 
     # -- 2. dispatch plan (ONE sort; aux metrics reuse its counts) ----------
     dispatch = cfg.dispatch
-    if dispatch == "grouped" and expert_tp_axis is not None:
-        # expert TP gathers/reduce-scatters FIXED-shape (E_local, T, d)
-        # buffers over the f-sharded weights; the grouped path's ragged
-        # segments don't fit that collective pattern yet.
-        dispatch = "sort"
+    tp = expert_tp_axis
 
     if dispatch == "grouped":
         # dropless: expert-sorted (T·K, d) buffer, no capacity padding;
@@ -149,12 +162,28 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
             recv, recv_counts = alltoall.grouped_all_to_all(
                 packed, eplan.send_counts, model_axis,
                 mode=cfg.a2a, inner=cfg.a2a_inner)
-            ffn_src, dst_map, group_sizes = layout.grouped_ep_receive_maps(
-                recv_counts, B)
-            xs = gather(recv.reshape(model_size * B, d), ffn_src)
+            chunk, counts = recv, recv_counts        # (M, B, d), (M, E_local)
         else:
+            B = capacity.grouped_tp_gather_bound(cfg, T)
             xs = (gather(x, gplan.token) if cfg.use_pallas_gate
                   else layout.dispatch_grouped(x, gplan))
+            chunk, counts = xs[None], gplan.counts[None]   # (1, B=T·K, d)
+        if tp is not None:
+            # ragged-aware expert TP: gather every TP rank's bounded
+            # chunks + counts (the chunk layout is identical on all
+            # ranks — B derives from static shapes only, see
+            # capacity.grouped_tp_gather_bound), merge into one shared
+            # expert-major order, and run this rank's f-slice.
+            chunk = lax.all_gather(chunk, tp, axis=0, tiled=True)
+            counts = lax.all_gather(counts, tp, axis=0, tiled=True)
+        # the gathered chunk count is R·M by all_gather construction
+        # (1 with neither TP nor EP) — the merged maps key off it
+        n_chunks = chunk.shape[0]
+        if model_size > 1 or tp is not None:
+            ffn_src, dst_map, group_sizes = layout.grouped_tp_gather_maps(
+                counts, B)
+            xs = gather(chunk.reshape(n_chunks * B, d), ffn_src)
+        else:
             group_sizes = gplan.counts
         ys = gffn.grouped_ffn(params, xs.astype(params["w_up"].dtype),
                               group_sizes, act,
@@ -162,10 +191,17 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
                               interpret=kops.INTERPRET,
                               block_m=(cfg.grouped_block_m
                                        or gffn.DEFAULT_BLOCK_M))
+        if tp is not None:
+            # back to chunk layout, then reduce the f-contraction while
+            # scattering each TP rank its own rows (tiled: chunk r of
+            # the summed (R·M·B, d) array is rank r's (M·B, d) layout)
+            h = gather(ys, dst_map)
+            ys = lax.psum_scatter(h, tp, scatter_dimension=0, tiled=True)
         if model_size > 1:
             # reverse path: expert-major FFN rows → exchange layout →
             # AllToAll home → this rank's sorted rows → weighted combine
-            h = gather(ys, dst_map).reshape(model_size, B, d)
+            h = (ys.reshape(model_size, B, d) if tp is not None
+                 else gather(ys, dst_map).reshape(model_size, B, d))
             h = alltoall.all_to_all(h, model_axis, mode=cfg.a2a,
                                     inner=cfg.a2a_inner)
             ys = gather(h.reshape(model_size * B, d), eplan.back_map)
@@ -334,12 +370,13 @@ def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
             pmean_axes=axis_names, rng=rng,
             token_ids=tid, valid=valid, expert_tp_axis=tp)
 
+    # metric out_specs come from balance's canonical key list — a metric
+    # added there must not desync this spec tree (shard_map fails with an
+    # opaque pytree-mismatch error when it does)
     y, aux, metrics = shard_map(
         local_fn, mesh=mesh,
         in_specs=(param_specs, tok_spec, tok_spec, tok_spec, P()),
-        out_specs=(tok_spec, P(), {k: P() for k in
-                                   ("load_balance_loss", "router_z_loss",
-                                    "expert_load_max", "expert_load_min")}),
+        out_specs=(tok_spec, P(), {k: P() for k in balance.METRIC_KEYS}),
         check_vma=False,
     )(params, toks, valid, tid, rng)
 

@@ -18,6 +18,17 @@ a grouped matmul (MegaBlocks' dMoE primitive).  Two implementations:
 Rows past ``offsets[-1]`` (the virtual drop bucket's tail under token
 padding) belong to no expert and come out zero — matching ragged_dot.
 
+Expert tensor parallelism needs no kernel variant: the kernels are
+shape-polymorphic in the weights' f dim, so the TP path simply passes
+the local f-slice — ``w_up/w_gate (E, d, f/R)`` and ``w_out (E, f/R,
+d)``.  The up/gate matmuls then emit f/R-wide activations (swiglu /
+geglu are elementwise in f, so the slices compose locally), the out
+matmul contracts the f/R slice into a PARTIAL (M, d) sum, and the
+caller's psum_scatter over the TP axis completes the contraction.  The
+Pallas backward inherits this for free — dlhs sums R partials through
+the same psum (the psum_scatter transpose), drhs produces each rank's
+own (d, f/R) / (f/R, d) weight-gradient slice locally.
+
 The ``custom_vjp`` backward is kernelized too (MegaBlocks trains the
 dMoE primitive in both directions) — no forward recompute, both
 gradients straight off the residuals:
@@ -207,17 +218,32 @@ def grouped_ffn(params: Dict[str, jax.Array], xs: jax.Array,
                 use_pallas: bool = False, interpret: bool = True,
                 block_m: int = DEFAULT_BLOCK_M) -> jax.Array:
     """Expert FFN over the expert-sorted (M, d) buffer — dropless twin of
-    ``moe.expert_ffn``.  w_up/w_gate/w_out have leading dim E."""
+    ``moe.expert_ffn``.  w_up/w_gate/w_out have leading dim E; their f
+    dim may be a TP slice (see module docstring) — the output is then a
+    partial sum the caller must reduce over the TP axis."""
+    if "w_gate" in params and params["w_gate"].shape != params["w_up"].shape:
+        # a mixed TP/unsliced param tree would silently produce a wrong
+        # elementwise swiglu on the narrower slice
+        raise ValueError(
+            f"grouped_ffn: w_gate shape {params['w_gate'].shape} != w_up "
+            f"shape {params['w_up'].shape} — up/gate must carry the same "
+            f"(E, d, f) slice (expert-TP shards both on f together)")
     if use_pallas:
         mm = functools.partial(grouped_matmul, interpret=interpret,
                                block_m=block_m)
     else:
         def mm(l, r, sizes):
             # f32 accumulation, rounded back per matmul — matches the
-            # sort path's einsum precision in bf16
-            return lax.ragged_dot(
-                l, r, sizes,
-                preferred_element_type=jnp.float32).astype(l.dtype)
+            # sort path's einsum precision in bf16.  The f32 compute is
+            # expressed as input casts, NOT preferred_element_type: the
+            # ragged_dot transpose emits cotangents in the ACCUMULATE
+            # dtype, and that f32 leak into a bf16 graph trips the
+            # lowering verifier once TP collectives surround it (the
+            # cast form transposes dtype-soundly; bwd dtypes asserted
+            # in tests).
+            dt = l.dtype
+            return lax.ragged_dot(l.astype(jnp.float32),
+                                  r.astype(jnp.float32), sizes).astype(dt)
     h = mm(xs, params["w_up"], group_sizes)
     if act in ("swiglu", "geglu"):
         gt = mm(xs, params["w_gate"], group_sizes)

@@ -34,6 +34,16 @@ def mesh_model8():
 
 
 @pytest.fixture(scope="session")
+def mesh_dm22():
+    """(data=2, model=2) mesh — the grouped × expert-TP × grouped-EP
+    composition tests: experts shard 2-way over ``model`` (the grouped
+    AllToAll crosses it) while the expert weights' f dim shards 2-way
+    over ``data`` (the expert-TP all-gather/psum_scatter crosses it)."""
+    from repro.launch.mesh import make_smoke_mesh
+    return make_smoke_mesh((2, 2))
+
+
+@pytest.fixture(scope="session")
 def mesh_ep4():
     """4-way pure expert-parallel mesh on the forced 8-device CPU
     backend — home of the grouped-EP ≡ sort ≡ dense equivalence tests

@@ -91,6 +91,16 @@ def test_hierarchical_inner_must_divide_axis(mesh_model8):
             v, "model", mode="hierarchical", inner=2, outer=3))(x)
 
 
+def test_unknown_a2a_mode_rejected():
+    """A typo'd mode must raise naming A2A_MODES whatever ``inner`` is:
+    with inner<=1 it used to silently run flat, with inner>1 it died on
+    a bare ``assert`` stripped under ``python -O``."""
+    x = jax.random.normal(RNG, (8, 4, 8))
+    for inner in (1, 2):
+        with pytest.raises(ValueError, match="'flat', 'hierarchical'"):
+            alltoall.all_to_all(x, "model", mode="ring", inner=inner)
+
+
 def test_bad_a2a_inner_rejected_by_config():
     from repro.core.config import MoEConfig
     with pytest.raises(ValueError, match="a2a_inner"):

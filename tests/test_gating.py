@@ -22,6 +22,49 @@ ALL_GATES = [
 ]
 
 
+# config corners that exercise each strategy's internal clamping: the
+# static slot count gate_k() promises must be what route() emits, or
+# capacity/bound sizing and the dispatch plans desync from the routing
+OVERSIZED_GATES = [
+    ("topk", dict(top_k=4)),
+    ("switch", dict(top_k=4)),
+    ("gshard", dict(top_k=4)),
+    ("ktop1", dict(num_prototypes=4, top_k=4)),
+    ("sam", dict(num_groups=4, top_k=8)),      # top_k > E/G: sam clamps
+    ("base", dict(top_k=4)),
+    ("hash", dict(top_k=4)),
+    ("dense_to_sparse", dict(top_k=4)),
+]
+
+
+@pytest.mark.parametrize("gate,kw", ALL_GATES + OVERSIZED_GATES)
+def test_gate_k_matches_route_width(gate, kw):
+    """gate_k ≡ route() width for every strategy × config corner."""
+    S, E = 32, 8
+    cfg = MoEConfig(num_experts=E, gate=gate, **kw)
+    logits = jax.random.normal(RNG, (S, E))
+    out = gating.route(cfg, logits, rng=RNG, token_ids=jnp.arange(S))
+    assert out.expert_index.shape == (S, gating.gate_k(cfg))
+    assert out.combine_weights.shape == (S, gating.gate_k(cfg))
+
+
+def test_gate_k_sam_clamps_to_group_width():
+    """Regression: sam's top-k runs INSIDE the chosen group, so
+    top_k > E/G yields E/G slots — gate_k used to return the raw top_k,
+    tripping route()'s shape assert and over-sizing expert_capacity."""
+    from repro.core import capacity
+    cfg = MoEConfig(num_experts=8, gate="sam", num_groups=4, top_k=4)
+    assert gating.gate_k(cfg) == 2
+    out = gating.route(cfg, jax.random.normal(RNG, (16, 8)))
+    assert out.expert_index.shape == (16, 2)
+    # capacity and the grouped-EP bound size off the CLAMPED k
+    cfg_eq = MoEConfig(num_experts=8, gate="sam", num_groups=4, top_k=2)
+    assert (capacity.expert_capacity(cfg, 64, 8)
+            == capacity.expert_capacity(cfg_eq, 64, 8))
+    assert (capacity.grouped_segment_bound(cfg, 64, 4)
+            == capacity.grouped_segment_bound(cfg_eq, 64, 4))
+
+
 @pytest.mark.parametrize("gate,kw", ALL_GATES)
 def test_gate_contract(gate, kw):
     """Every strategy: static shapes, indices in range, finite weights,

@@ -71,6 +71,8 @@ def test_token_padding_path(mesh8):
 @pytest.mark.parametrize("gate,kw", [
     ("switch", {}), ("gshard", {}), ("topk", dict(top_k=2)),
     ("ktop1", dict(num_prototypes=2)), ("sam", dict(num_groups=2, top_k=2)),
+    # sam with top_k > E/G: gate_k clamps, capacity sizes off the clamp
+    ("sam", dict(num_groups=4, top_k=8)),
     ("base", {}), ("dense_to_sparse", dict(top_k=2))])
 def test_all_gates_through_layer(mesh8, gate, kw):
     cfg = MoEConfig(num_experts=8, gate=gate, capacity_factor=4.0, **kw)
@@ -208,3 +210,25 @@ def test_expert_tp_typo_raises(mesh8):
     with pytest.raises(ValueError, match="expert_tp_axis"):
         moe.sharded_moe_apply(mesh8, cfg, p, x, num_experts=4, act="swiglu",
                               expert_tp_axis="dataa")
+
+
+def test_config_mode_typos_raise_under_optimization():
+    """gate/a2a/dispatch typos must raise real ValueErrors naming the
+    valid options — the old bare asserts vanish under ``python -O``."""
+    with pytest.raises(ValueError, match="topp.*topk|gating strategy"):
+        MoEConfig(num_experts=8, gate="topp")
+    with pytest.raises(ValueError, match="'flat', 'hierarchical'"):
+        MoEConfig(num_experts=8, a2a="ring")
+    with pytest.raises(ValueError, match="'sort', 'dense', 'grouped'"):
+        MoEConfig(num_experts=8, dispatch="padded")
+
+
+def test_metrics_out_specs_track_balance_keys(mesh8):
+    """The shard_map metric out_specs derive from balance.METRIC_KEYS —
+    the layer's returned metrics dict must carry exactly those keys."""
+    from repro.core import balance
+    cfg = MoEConfig(num_experts=8, gate="switch", capacity_factor=4.0)
+    p = _params(cfg)
+    x = jax.random.normal(RNG, (4, 8, D))
+    _, _, m = _apply(mesh8, cfg, p, x)
+    assert tuple(sorted(m)) == tuple(sorted(balance.METRIC_KEYS))
