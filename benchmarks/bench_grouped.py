@@ -26,6 +26,12 @@ f dim sharded over ``data`` — the ragged-aware TP all-gather /
 psum_scatter pair around the grouped matmuls vs the fixed-shape
 sort-TP pair, across the same a2a matrix.
 
+``run_overlap`` (the ``grouped_overlap`` suite, ``grouped/overlap/*``
+entries) sweeps the overlapped pipeline's chunk count P ∈ {1, 2, 4}
+over both a2a modes on the EP mesh — the CPU numbers bound the
+pipeline's bookkeeping overhead; the async-overlap win itself is a TPU
+quantity (see ``alltoall.cost_pipelined``).
+
 ``run_bwd`` (the ``grouped_bwd`` suite) captures TRAINING-step cost,
 not just forward dispatch: value_and_grad over the expert FFN with the
 Pallas grouped kernels (forward + the dlhs/drhs backward kernels), the
@@ -93,12 +99,11 @@ def run(paper: bool = False):
 TP_MESH = (2, 4)        # (data=TP, model=EP) — data carries the f slices
 
 
-def _run_sharded_matrix(mesh_shape, mesh_axes, tp_axis, key_tag, tag,
-                        paper: bool):
-    """Shared body of ``run_ep``/``run_tp``: time the full MoE layer for
-    the {sort, grouped} × {flat, hierarchical} matrix on the given mesh
-    (optionally with expert TP over ``tp_axis``) and emit one entry per
-    cell with the grouped-vs-sort / hier-vs-flat ratios."""
+def _sharded_setup(mesh_shape, mesh_axes, tp_axis, key_tag, paper: bool):
+    """Shared setup for the sharded grouped suites (``run_ep``/``run_tp``
+    /``run_overlap``): the smoke mesh, a switch-routed token batch,
+    f32 expert params, and a cfg → jitted-layer factory.  Returns None
+    (after printing why) when the backend has too few devices."""
     import numpy as np
     n_dev = int(np.prod(mesh_shape))
     if len(jax.devices()) < n_dev:
@@ -110,7 +115,7 @@ def _run_sharded_matrix(mesh_shape, mesh_axes, tp_axis, key_tag, tag,
               f"grouped/{key_tag}/* entries will NOT be refreshed "
               f"(unset XLA_FLAGS or include "
               f"--xla_force_host_platform_device_count=8)")
-        return
+        return None
     from repro.launch.mesh import make_smoke_mesh
     mesh = make_smoke_mesh(mesh_shape, mesh_axes)
     d, d_ff, E = (512, 512, 16) if paper else (128, 128, 16)
@@ -129,6 +134,20 @@ def _run_sharded_matrix(mesh_shape, mesh_axes, tp_axis, key_tag, tag,
                                             expert_tp_axis=tp_axis)
             return y
         return fn
+
+    return layer_fn, params, x, E, S
+
+
+def _run_sharded_matrix(mesh_shape, mesh_axes, tp_axis, key_tag, tag,
+                        paper: bool):
+    """Shared body of ``run_ep``/``run_tp``: time the full MoE layer for
+    the {sort, grouped} × {flat, hierarchical} matrix on the given mesh
+    (optionally with expert TP over ``tp_axis``) and emit one entry per
+    cell with the grouped-vs-sort / hier-vs-flat ratios."""
+    setup = _sharded_setup(mesh_shape, mesh_axes, tp_axis, key_tag, paper)
+    if setup is None:
+        return
+    layer_fn, params, x, E, S = setup
 
     t = {}
     for mode, a2a in (("sort", "flat"), ("sort", "hierarchical"),
@@ -169,6 +188,44 @@ def run_tp(paper: bool = False):
     FLOPs back — see core/layout.py's cost model)."""
     _run_sharded_matrix(TP_MESH, ("data", "model"), "data",
                         "tp", f"tp{TP_MESH[0]}xep{TP_MESH[1]}", paper)
+
+
+OVERLAP_SWEEP = (1, 2, 4)
+
+
+def run_overlap(paper: bool = False):
+    """Overlapped (chunked, double-buffered) grouped-EP pipeline: full
+    MoE-layer time at ``overlap_chunks`` P ∈ {1, 2, 4} on the EP_WAYS-way
+    model mesh, flat and hierarchical.
+
+    On this CPU container collectives execute synchronously, so the
+    vs_p1 RATIOS mostly measure the pipeline's bookkeeping overhead
+    (window slicing, P× smaller per-call collectives) — the tracked
+    floor the real async win must clear; on TPU the steady-state
+    exchange hides behind the grouped matmuls and only fill/drain stay
+    exposed (``alltoall.cost_pipelined``).  Tracked under ``run.py
+    --check`` like every grouped suite.
+    """
+    setup = _sharded_setup((EP_WAYS,), ("model",), None, "overlap", paper)
+    if setup is None:
+        return
+    layer_fn, params, x, E, S = setup
+
+    t = {}
+    for a2a in ("flat", "hierarchical"):
+        for P in OVERLAP_SWEEP:
+            cfg = MoEConfig(num_experts=E, gate="switch",
+                            capacity_factor=1.25, dispatch="grouped",
+                            a2a=a2a, a2a_inner=2, overlap_chunks=P)
+            t[(a2a, P)] = timeit(layer_fn(cfg), params, x)
+
+    for (a2a, P), us in t.items():
+        ratios = {}
+        derived = f"ep{EP_WAYS} chunked pipeline"
+        if P > 1:
+            ratios["vs_p1"] = t[(a2a, 1)] / us
+            derived += f"; vs_p1={ratios['vs_p1']:.2f}x"
+        emit(f"grouped/overlap/{a2a}/P{P}/S{S}", us, derived, **ratios)
 
 
 def run_bwd(paper: bool = False):

@@ -36,7 +36,8 @@ import pathlib  # noqa: E402
 import sys  # noqa: E402
 
 FIGS = {"topk": "3", "layout": "4", "alltoall": "7", "breakdown": "1",
-        "overall": "8", "grouped": "4+", "grouped_bwd": "4+ (train step)"}
+        "overall": "8", "grouped": "4+", "grouped_bwd": "4+ (train step)",
+        "grouped_overlap": "4+ (overlapped pipeline)"}
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_moe.json"
 
@@ -159,7 +160,15 @@ def main() -> None:
                     default=DEFAULT_CHECK_FACTOR,
                     help="slowdown ratio that counts as a regression "
                          "(default 1.25; widen on noisy machines)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="read/write this JSON instead of the committed "
+                         "BENCH_moe.json (tooling tests of the gate itself "
+                         "— tests/test_bench_gate.py — point it at a "
+                         "scratch file)")
     args = ap.parse_args()
+    if args.json:
+        global JSON_PATH
+        JSON_PATH = pathlib.Path(args.json)
     from benchmarks import (bench_alltoall, bench_breakdown, bench_grouped,
                             bench_layout, bench_overall, bench_topk)
     # suite name → run callable; grouped_bwd is the fwd+bwd training-path
@@ -168,7 +177,8 @@ def main() -> None:
     mods = {"topk": bench_topk.run, "layout": bench_layout.run,
             "alltoall": bench_alltoall.run, "breakdown": bench_breakdown.run,
             "overall": bench_overall.run, "grouped": bench_grouped.run,
-            "grouped_bwd": bench_grouped.run_bwd}
+            "grouped_bwd": bench_grouped.run_bwd,
+            "grouped_overlap": bench_grouped.run_overlap}
     wanted = args.only.split(",") if args.only else list(mods)
     unknown = [w for w in wanted if w not in mods]
     if unknown:

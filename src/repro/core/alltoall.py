@@ -130,6 +130,15 @@ def grouped_all_to_all(tokens: jax.Array, counts: jax.Array,
     collective (the paper's two-stage win applies unchanged — segments
     are opaque (B, d) chunks); the tiny count matrix always goes flat,
     since its bytes are noise next to its latency.
+
+    Chunked (overlapped) exchange: the pipelined grouped path
+    (``MoEConfig.overlap_chunks = P > 1``) calls this once per
+    ``(M, B/P, d)`` WINDOW of the bounded segment, with the matching
+    per-window count matrix (``layout.grouped_chunk_counts``).  Nothing
+    here changes — each window is a self-contained grouped exchange at
+    the per-chunk bound, and the received windows reassemble to the
+    (M, B, d) layout by concatenation along the bound dim.  The cost
+    trade is modeled by :func:`cost_pipelined`.
     """
     recv_counts = lax.all_to_all(counts, axis_name, split_axis=0,
                                  concat_axis=0, tiled=True)
@@ -191,3 +200,29 @@ def cost_hierarchical(bytes_per_device: float, N: int, G: int,
     nic_bytes = G * (N - 1) / N * bytes_per_device
     b = n_nic_msgs * slow.alpha + nic_bytes * slow.beta
     return a + b
+
+
+def cost_pipelined(bytes_per_device: float, N: int, G: int,
+                   fast: LinkSpec, slow: LinkSpec, *, n_chunks: int,
+                   compute_s: float, cost_fn=cost_hierarchical) -> float:
+    """Chunked dispatch-exchange ↔ expert-compute pipeline, α–β level.
+
+    The serial grouped layer pays ``a2a(B) + T_ffn + a2a(B)`` (dispatch,
+    matmuls, combine).  Splitting into P windows and double-buffering,
+    the steady state hides the smaller of the per-window terms behind
+    the larger; only the pipeline FILL (the first window's dispatch
+    exchange) and DRAIN (the last window's combine) stay exposed:
+
+        T_pipe ≈ a2a(B/P)                     fill
+               + (P-1) · max(a2a(B/P), T_ffn/P)   steady state
+               + T_ffn/P + a2a(B/P)           drain
+
+    The α term is paid P× (P× more, P× smaller messages) — chunking
+    spends the paper's message-aggregation win to buy latency hiding,
+    so the optimum P balances ``α·P`` growth against the hidden
+    ``β·B`` term.  That autotuning of ``overlap_chunks`` is the ROADMAP
+    follow-up; this function is its objective.
+    """
+    per = cost_fn(bytes_per_device / n_chunks, N, G, fast, slow)
+    per_ffn = compute_s / n_chunks
+    return per + (n_chunks - 1) * max(per, per_ffn) + per_ffn + per

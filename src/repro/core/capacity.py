@@ -79,3 +79,32 @@ def grouped_tp_gather_bound(cfg: MoEConfig, num_tokens: int) -> int:
     agreement argument, same static inputs.
     """
     return num_tokens * gating.gate_k(cfg)
+
+
+def grouped_overlap_chunk_bound(cfg: MoEConfig, bound: int) -> int:
+    """Per-chunk row bound Bc = bound / overlap_chunks for the overlapped
+    (chunked, double-buffered) grouped pipeline.
+
+    Agreement across ranks: ``bound`` is already a pure function of the
+    config and the STATIC per-shard token count
+    (:func:`grouped_segment_bound` under expert parallelism,
+    :func:`grouped_tp_gather_bound` otherwise), and ``overlap_chunks``
+    is config — so every EP/TP rank derives the same Bc and the chunked
+    exchange / TP-gather layouts stay aligned window for window.
+
+    The division must be exact: a remainder window would give the final
+    chunk a different static shape than the rest, and the pipeline's
+    collectives (grouped AllToAll, TP all-gather) need one shape for
+    every window.
+    """
+    chunks = cfg.overlap_chunks
+    if chunks <= 1:
+        return bound
+    if bound % chunks:
+        raise ValueError(
+            f"MoEConfig.overlap_chunks={chunks} does not divide the grouped "
+            f"segment bound B={bound} (grouped_segment_bound / "
+            f"grouped_tp_gather_bound at this shard's token count) — pick "
+            f"overlap_chunks from the divisors of {bound}, or adjust "
+            f"MoEConfig.grouped_ep_bound_factor so the bound is a multiple")
+    return bound // chunks

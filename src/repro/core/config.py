@@ -35,6 +35,8 @@ A2A_MODES = ("flat", "hierarchical")
 #           core/layout.py GroupedEPPlan); under expert TP the bounded
 #           chunks + counts all-gather over the TP axis and each rank
 #           runs its f-slice (core/layout.py grouped_tp_gather_maps).
+#           overlap_chunks > 1 pipelines the exchange against the
+#           matmuls in static microchunk windows (core/moe.py).
 DISPATCH_MODES = ("sort", "dense", "grouped")
 
 
@@ -71,6 +73,14 @@ class MoEConfig:
     # Row-block size for the grouped-matmul kernels (fwd, dlhs, drhs).
     # None → the kernel default (kernels/grouped_ffn.DEFAULT_BLOCK_M).
     grouped_block_m: Optional[int] = None
+    # Overlapped (chunked) grouped pipeline: split the bounded expert-
+    # sorted dispatch buffer into this many static microchunks and
+    # software-pipeline the grouped AllToAll against the grouped expert
+    # matmuls (core/moe.py; 1 = no pipelining, today's serial exchange).
+    # Grouped dispatch only.  Must divide the grouped segment bound —
+    # checked where the bound is known, since the bound depends on the
+    # per-shard token count (capacity.grouped_overlap_chunk_bound).
+    overlap_chunks: int = 1
 
     def __post_init__(self):
         # real exceptions, not asserts: these must survive ``python -O``
@@ -99,6 +109,10 @@ class MoEConfig:
             raise ValueError(
                 f"MoEConfig.grouped_block_m must be >= 1 or None, got "
                 f"{self.grouped_block_m}")
+        if not isinstance(self.overlap_chunks, int) or self.overlap_chunks < 1:
+            raise ValueError(
+                f"MoEConfig.overlap_chunks must be an int >= 1 (1 disables "
+                f"the overlapped pipeline), got {self.overlap_chunks!r}")
 
 
 @dataclass(frozen=True)

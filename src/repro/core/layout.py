@@ -64,6 +64,17 @@ M expert-parallel ranks, segment bound B):
                                               drhs: Σ_e ceil(n_e/bm)
                                               (K, N)-tile outer-product
                                               accumulations in f32
+    grouped-EP  no extra sort; O(P·N·E/M)     SAME total bytes, in P
+    overlap     window-clip arithmetic off    (M, B/P, d) windows: the
+    (P chunks)  the bounded count matrix      steady-state exchange hides
+                (:func:`grouped_chunk_counts` behind the Σ n_e/P-row
+                + the per-chunk receive maps  matmuls of the previous
+                at bound B/P)                 window; only the FILL
+                                              (first dispatch a2a) and
+                                              DRAIN (last combine a2a)
+                                              stay exposed, at P× the α
+                                              message count — see
+                                              ``alltoall.cost_pipelined``
     ==========  ============================  =========================
 
 The grouped-EP exchange pads to the segment bound B instead of the
@@ -379,6 +390,38 @@ def grouped_tp_gather_maps(counts: jax.Array, bound: int):
     """
     return grouped_ep_receive_maps(
         counts.reshape(-1, counts.shape[-1]), bound)
+
+
+def grouped_chunk_counts(counts: jax.Array, bound: int,
+                         n_chunks: int) -> jax.Array:
+    """Split bounded expert-sorted segment counts into per-window counts
+    for the overlapped (chunked) grouped pipeline.
+
+    ``counts`` ``(N, E_seg)``: row n describes an expert-sorted segment
+    whose live rows are packed from row 0 of an ``(N, bound, d)`` buffer
+    — the grouped-EP send layout (N = M destination ranks,
+    ``GroupedEPPlan.send_counts``) or the single-rank sorted buffer
+    (N = 1, the routing counts).  Returns ``(n_chunks, N, E_seg)``:
+    entry p is the count matrix of window rows
+    ``[p·bound/n_chunks, (p+1)·bound/n_chunks)``.
+
+    Each window again satisfies the receive-map contract — expert-sorted
+    within the window (a contiguous slice of a sorted segment stays
+    sorted), live rows packed from window row 0 (the live prefix of the
+    segment either covers the window start or ended before it), at most
+    ``bound/n_chunks`` of them — so the SAME offset arithmetic
+    (:func:`grouped_ep_receive_maps` / :func:`grouped_tp_gather_maps`
+    at the per-chunk bound) rebuilds each window's expert-major FFN
+    order, and the windows sum back to the unchunked counts exactly.
+    """
+    N, _ = counts.shape
+    bc = bound // n_chunks
+    off = jnp.concatenate(
+        [jnp.zeros((N, 1), jnp.int32),
+         jnp.cumsum(counts, axis=1, dtype=jnp.int32)], axis=1)  # (N, Es+1)
+    win = (jnp.arange(n_chunks, dtype=jnp.int32) * bc)[:, None, None]
+    rel = jnp.clip(off[None] - win, 0, bc)              # (P, N, Es+1)
+    return (rel[..., 1:] - rel[..., :-1]).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

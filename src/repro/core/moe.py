@@ -26,6 +26,22 @@ order every TP rank agrees on, each rank runs the grouped matmuls over
 its f-slice of the expert weights, and a psum_scatter returns the
 f-reduced token rows — see ``moe_block_local``.
 
+Overlapped pipeline (``cfg.overlap_chunks = P > 1``, grouped dispatch
+only): the bounded expert-sorted buffer is split into P static
+``(·, B/P, d)`` microchunk windows (``layout.grouped_chunk_counts``
+window-clips the count matrices; ``capacity.grouped_overlap_chunk_bound``
+checks P divides the bound) and the per-chunk exchange → grouped-matmul
+→ combine stages run as a statically-unrolled, double-buffered software
+pipeline: window i+1's dispatch AllToAll is issued before window i's
+matmuls consume the carried receive buffer, and each window's combine
+AllToAll is consumed only at the drain — XLA's async collectives then
+hide the steady-state exchange behind compute, leaving only the fill
+(first dispatch) and drain (last combine) exposed (the α–β trade is
+``alltoall.cost_pipelined``).  Composes with grouped-EP, expert-TP and
+both a2a modes; the backward differentiates through the unrolled
+pipeline into the same custom_vjp grouped kernels.  P = 1 is exactly
+the serial path.
+
 Tokens are sharded over EVERY mesh axis (the token axis is the product
 batch·seq flattened): each of the D·M devices routes its own T/(D·M)
 tokens.  Experts shard over ``model`` and replicate over ``data``/``pod``
@@ -159,52 +175,104 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
             B = capacity.grouped_segment_bound(cfg, T, model_size)
             eplan = layout.plan_grouped_ep(gplan, E, model_size, B)
             packed = gather(x, eplan.pack_map).reshape(model_size, B, d)
-            recv, recv_counts = alltoall.grouped_all_to_all(
-                packed, eplan.send_counts, model_axis,
-                mode=cfg.a2a, inner=cfg.a2a_inner)
-            chunk, counts = recv, recv_counts        # (M, B, d), (M, E_local)
+            send_counts = eplan.send_counts            # (M, E_local)
         else:
             B = capacity.grouped_tp_gather_bound(cfg, T)
-            xs = (gather(x, gplan.token) if cfg.use_pallas_gate
-                  else layout.dispatch_grouped(x, gplan))
-            chunk, counts = xs[None], gplan.counts[None]   # (1, B=T·K, d)
-        if tp is not None:
-            # ragged-aware expert TP: gather every TP rank's bounded
-            # chunks + counts (the chunk layout is identical on all
-            # ranks — B derives from static shapes only, see
-            # capacity.grouped_tp_gather_bound), merge into one shared
-            # expert-major order, and run this rank's f-slice.
-            chunk = lax.all_gather(chunk, tp, axis=0, tiled=True)
-            counts = lax.all_gather(counts, tp, axis=0, tiled=True)
-        # the gathered chunk count is R·M by all_gather construction
-        # (1 with neither TP nor EP) — the merged maps key off it
-        n_chunks = chunk.shape[0]
-        if model_size > 1 or tp is not None:
-            ffn_src, dst_map, group_sizes = layout.grouped_tp_gather_maps(
-                counts, B)
-            xs = gather(chunk.reshape(n_chunks * B, d), ffn_src)
+            xs0 = (gather(x, gplan.token) if cfg.use_pallas_gate
+                   else layout.dispatch_grouped(x, gplan))
+            packed = xs0.reshape(1, B, d)              # the sorted buffer
+            send_counts = gplan.counts[None]           # (1, E)
+        n_src = packed.shape[0]
+
+        def exchange(chunk, counts):
+            """Dispatch exchange of one bounded window (identity without
+            expert parallelism)."""
+            if model_size > 1:
+                return alltoall.grouped_all_to_all(
+                    chunk, counts, model_axis,
+                    mode=cfg.a2a, inner=cfg.a2a_inner)
+            return chunk, counts
+
+        def compute(recv, counts, bc):
+            """Grouped matmuls over one received window ``(n_src, bc, d)``
+            + its count matrix, returning the FFN output in the SAME
+            home/exchange layout (TP gathered & f-reduced, EP combine
+            AllToAll'd back to the source ranks)."""
+            if tp is not None:
+                # ragged-aware expert TP: gather every TP rank's bounded
+                # chunks + counts (the chunk layout is identical on all
+                # ranks — the bound derives from static shapes only, see
+                # capacity.grouped_tp_gather_bound), merge into one shared
+                # expert-major order, and run this rank's f-slice.
+                recv = lax.all_gather(recv, tp, axis=0, tiled=True)
+                counts = lax.all_gather(counts, tp, axis=0, tiled=True)
+            # the gathered chunk count is R·M by all_gather construction
+            # (1 with neither TP nor EP) — the merged maps key off it
+            n_chunks = recv.shape[0]
+            if model_size > 1 or tp is not None:
+                ffn_src, dst_map, group_sizes = layout.grouped_tp_gather_maps(
+                    counts, bc)
+                xs = gather(recv.reshape(n_chunks * bc, d), ffn_src)
+            else:
+                xs = recv.reshape(bc, d)
+                group_sizes = counts[0]
+            ys = gffn.grouped_ffn(params, xs.astype(params["w_up"].dtype),
+                                  group_sizes, act,
+                                  use_pallas=cfg.use_pallas_gate,
+                                  interpret=kops.INTERPRET,
+                                  block_m=(cfg.grouped_block_m
+                                           or gffn.DEFAULT_BLOCK_M))
+            if tp is not None:
+                # back to chunk layout, then reduce the f-contraction
+                # while scattering each TP rank its own rows (tiled:
+                # chunk r of the summed (R·M·bc, d) array is rank r's
+                # (M·bc, d) layout)
+                h = gather(ys, dst_map)
+                ys = lax.psum_scatter(h, tp, scatter_dimension=0,
+                                      tiled=True)
+            if model_size > 1:
+                # expert-major FFN rows → exchange layout → AllToAll home
+                h = (ys.reshape(model_size, bc, d) if tp is not None
+                     else gather(ys, dst_map).reshape(model_size, bc, d))
+                return alltoall.all_to_all(h, model_axis, mode=cfg.a2a,
+                                           inner=cfg.a2a_inner)
+            return ys.reshape(1, bc, d)
+
+        n_overlap = cfg.overlap_chunks
+        if n_overlap > 1:
+            # overlapped pipeline: P static (n_src, Bc, d) windows of the
+            # bounded buffer, software-pipelined with a double buffer —
+            # window i+1's dispatch exchange is issued BEFORE window i's
+            # grouped matmuls consume the carried receive buffer, and
+            # each window's combine AllToAll is consumed only at the
+            # drain, so XLA's async collectives overlap both directions
+            # with compute.  Statically unrolled (P is a config int):
+            # a fori_loop would fold the P exchanges into one loop-body
+            # collective, hiding the pipeline from the scheduler (and
+            # from the jaxpr witness tests).
+            Bc = capacity.grouped_overlap_chunk_bound(cfg, B)
+            chunk_counts = layout.grouped_chunk_counts(
+                send_counts, B, n_overlap)             # (P, n_src, E_seg)
+            windows = packed.reshape(n_src, n_overlap, Bc, d)
+            recv, rcounts = exchange(windows[:, 0], chunk_counts[0])
+            outs = []
+            for i in range(n_overlap):
+                if i + 1 < n_overlap:   # prefetch the next window's a2a
+                    recv_nxt, rcounts_nxt = exchange(windows[:, i + 1],
+                                                     chunk_counts[i + 1])
+                outs.append(compute(recv, rcounts, Bc))
+                if i + 1 < n_overlap:
+                    recv, rcounts = recv_nxt, rcounts_nxt
+            out = jnp.stack(outs, axis=1).reshape(n_src, B, d)
         else:
-            group_sizes = gplan.counts
-        ys = gffn.grouped_ffn(params, xs.astype(params["w_up"].dtype),
-                              group_sizes, act,
-                              use_pallas=cfg.use_pallas_gate,
-                              interpret=kops.INTERPRET,
-                              block_m=(cfg.grouped_block_m
-                                       or gffn.DEFAULT_BLOCK_M))
-        if tp is not None:
-            # back to chunk layout, then reduce the f-contraction while
-            # scattering each TP rank its own rows (tiled: chunk r of
-            # the summed (R·M·B, d) array is rank r's (M·B, d) layout)
-            h = gather(ys, dst_map)
-            ys = lax.psum_scatter(h, tp, scatter_dimension=0, tiled=True)
+            out = compute(*exchange(packed, send_counts), B)
+
         if model_size > 1:
-            # reverse path: expert-major FFN rows → exchange layout →
-            # AllToAll home → this rank's sorted rows → weighted combine
-            h = (ys.reshape(model_size, B, d) if tp is not None
-                 else gather(ys, dst_map).reshape(model_size, B, d))
-            h = alltoall.all_to_all(h, model_axis, mode=cfg.a2a,
-                                    inner=cfg.a2a_inner)
-            ys = gather(h.reshape(model_size * B, d), eplan.back_map)
+            # reverse path: combined exchange layout → this rank's
+            # sorted rows → weighted combine
+            ys = gather(out.reshape(model_size * B, d), eplan.back_map)
+        else:
+            ys = out.reshape(B, d)
         y = layout.combine_grouped(ys, gplan, T)
         if pmean_axes:
             aux = lax.pmean(aux, pmean_axes)
@@ -337,6 +405,16 @@ def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
     # f32 — halving the largest FSDP collective and its HBM transient.
     params = {k: (v.astype(x.dtype) if k != "gate_w" else v)
               for k, v in params.items()}
+
+    if cfg.overlap_chunks > 1 and cfg.dispatch != "grouped":
+        # the pipeline chunks the bounded expert-sorted buffer, which
+        # only the grouped path builds — silently ignoring the setting
+        # would fake an overlap win on the capacity-padded paths
+        raise ValueError(
+            f"MoEConfig.overlap_chunks={cfg.overlap_chunks} requires "
+            f"dispatch='grouped' (the overlapped pipeline chunks the "
+            f"grouped dispatch buffer), got dispatch="
+            f"{cfg.dispatch!r}")
 
     if (cfg.a2a == "hierarchical" and cfg.a2a_inner > 1
             and model_size > 1 and model_size % cfg.a2a_inner != 0):

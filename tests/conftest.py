@@ -14,6 +14,18 @@ import pytest  # noqa: E402
 # affect already-initialized test backends.
 assert len(jax.devices()) == 8, jax.devices()
 
+# Fixtures whose tests exercise multi-device collectives: auto-tagged with
+# the ``mesh`` marker (registered in pytest.ini) so `-m "not mesh"` gives
+# a quick single-device pass without hand-marking every test.
+MESH_FIXTURES = ("mesh8", "mesh_model8", "mesh_dm22", "mesh_ep4")
+
+
+def pytest_collection_modifyitems(items):
+    for item in items:
+        names = getattr(item, "fixturenames", ())
+        if any(f in names for f in MESH_FIXTURES):
+            item.add_marker(pytest.mark.mesh)
+
 
 @pytest.fixture(scope="session")
 def mesh1():

@@ -1,0 +1,71 @@
+"""The perf gate itself is covered: ``benchmarks/run.py --check`` must
+exit nonzero on an injected regression and zero on a clean rerun.
+
+Runs the real harness in subprocesses against a SCRATCH json (the
+``--json`` flag), never the committed BENCH_moe.json.  The ``alltoall``
+suite is the vehicle: six of its eight entries are α–β cost-MODEL
+outputs — deterministic, ≥ 1 ms (so they clear the gate's noise floor),
+and exactly reproducible run-to-run — which makes both directions of
+the test flake-free: the clean check's drift median sits at 1.0, and an
+injected 4× regression on a model entry survives the harness's
+best-of-2 remeasure by construction.
+
+Slow-marked (four benchmark-suite subprocess runs); select with
+``-m slow``.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+INJECT_ENTRY = "a2a/model/gpu-16x8"        # deterministic cost-model entry
+
+
+def _run(tmp_json, *extra):
+    cmd = [sys.executable, "-m", "benchmarks.run", "--only", "alltoall",
+           "--json", str(tmp_json), *extra]
+    env = {**os.environ, "PYTHONPATH": "src",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    return subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=900)
+
+
+@pytest.mark.slow
+def test_check_gate_exit_codes(tmp_path):
+    tmp_json = tmp_path / "bench.json"
+
+    # --check against a missing baseline is a setup error, caught before
+    # any benchmarking burns minutes
+    r = _run(tmp_json, "--check")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "no" in r.stdout and "diff against" in r.stdout
+
+    # plain run commits the baseline
+    r = _run(tmp_json)
+    assert r.returncode == 0, r.stdout + r.stderr
+    entries = json.loads(tmp_json.read_text())["entries"]
+    assert INJECT_ENTRY in entries
+    assert entries[INJECT_ENTRY]["us"] >= 1000.0   # clears the noise floor
+
+    # clean rerun: cost-model entries reproduce exactly, drift ≈ 1, no
+    # regression (factor 1.6 per run.py's own guidance for this box)
+    r = _run(tmp_json, "--check", "--check-factor", "1.6")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "--check ok" in r.stdout
+
+    # inject a 4x apparent regression into ONE gated entry (committed
+    # time quartered; the fresh run still reports the same model value)
+    committed = json.loads(tmp_json.read_text())
+    committed["entries"][INJECT_ENTRY]["us"] /= 4.0
+    assert committed["entries"][INJECT_ENTRY]["us"] >= 1000.0  # still gated
+    tmp_json.write_text(json.dumps(committed))
+
+    r = _run(tmp_json, "--check", "--check-factor", "1.6")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REGRESSION" in r.stdout and INJECT_ENTRY in r.stdout
+    # the harness remeasured once (best-of-2) before failing
+    assert "remeasuring" in r.stdout

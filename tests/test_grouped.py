@@ -310,6 +310,81 @@ def test_grouped_ep_pallas_matches_jnp(mesh_ep4):
     np.testing.assert_allclose(res[False], res[True], rtol=1e-4)
 
 
+@pytest.mark.parametrize("a2a,inner", [("flat", 1), ("hierarchical", 2)])
+def test_grouped_ep_bound_drops_deterministically(mesh_ep4, a2a, inner):
+    """``grouped_ep_bound_factor < 1`` drops EXACTLY the lowest-priority
+    rows of each over-subscribed (source rank → dest rank) segment — the
+    tail of the expert-sorted segment, so within each expert the kept
+    rows are the stable sort's highest-priority prefix (slot-major:
+    1st choices before 2nd choices, earlier tokens first) — identically
+    across reruns and across both a2a modes; and the aux-loss load
+    metrics still count the dropped assignments (they derive from the
+    ROUTING counts, not the post-drop exchange counts)."""
+    E, M = 8, 4
+    cfg = MoEConfig(num_experts=E, gate="topk", top_k=2, capacity_factor=8.0,
+                    dispatch="grouped", grouped_ep_bound_factor=0.5,
+                    a2a=a2a, a2a_inner=inner)
+    p = _params(cfg, E)
+    x = jax.random.normal(RNG, (8, 16, D))        # 128 tokens, 32 per rank
+
+    def fn(p, v):
+        return moe.sharded_moe_apply(mesh_ep4, cfg, p, v,
+                                     num_experts=E, act="swiglu")
+
+    y1, _, m1 = jax.jit(fn)(p, x)
+    y2, _, m2 = jax.jit(fn)(p, x)                 # fresh jit, same result
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert float(m1["expert_load_max"]) == float(m2["expert_load_max"])
+
+    toks = np.asarray(x.reshape(-1, D))
+    S_l = toks.shape[0] // M
+    B = capacity.grouped_segment_bound(cfg, S_l, M)
+    got = np.asarray(y1, np.float32).reshape(-1, D)
+    load_max = []
+    for m in range(M):
+        xs = jnp.asarray(toks[m * S_l:(m + 1) * S_l])
+        g = gating.route(cfg, gating.router_logits(cfg, xs, p["gate_w"]))
+        gplan = layout.plan_grouped(g, E, drop_bucket=True)
+        ep = layout.plan_grouped_ep(gplan, E, M, B)
+        back = np.asarray(ep.back_map)
+        sc = np.asarray(ep.send_counts).reshape(-1)   # (E,) routing order
+        counts = np.asarray(gplan.counts)
+        offs = np.asarray(gplan.offsets)
+        # binding bound: something actually drops on this shard
+        assert sc.sum() < counts.sum()
+        # the kept rows of every expert segment are its PREFIX — the
+        # highest-priority assignments survive, the tail drops
+        for e in range(E):
+            assert (back[offs[e]:offs[e] + sc[e]] >= 0).all()
+            assert (back[offs[e] + sc[e]:offs[e + 1]] == -1).all()
+        # expected per-token output: only surviving assignments contribute
+        K = g.expert_index.shape[1]
+        surv = np.zeros((S_l, K), bool)
+        order = np.asarray(gplan.sort_order)
+        token = np.asarray(gplan.token)
+        for r in range(offs[E]):
+            if back[r] >= 0:
+                surv[token[r], order[r] // S_l] = True
+        ye = moe.expert_ffn(
+            {k: v for k, v in p.items() if k != "gate_w"},
+            jnp.broadcast_to(xs, (E, S_l, D)), "swiglu")      # (E, S_l, d)
+        w = np.asarray(g.combine_weights)
+        idx = np.asarray(g.expert_index)
+        expect = np.zeros((S_l, D), np.float32)
+        for s in range(S_l):
+            for k in range(K):
+                if surv[s, k]:
+                    expect[s] += w[s, k] * np.asarray(ye[idx[s, k], s],
+                                                      np.float32)
+        np.testing.assert_allclose(got[m * S_l:(m + 1) * S_l], expect,
+                                   rtol=1e-4, atol=1e-5, err_msg=f"rank {m}")
+        load_max.append(counts.max() / counts.sum())
+    # load metrics count the dropped assignments: the pmean'd stat is the
+    # shard mean of ROUTING-count maxima, not of the clipped send counts
+    np.testing.assert_allclose(float(m1["expert_load_max"]),
+                               np.mean(load_max), rtol=1e-5)
+
+
 def test_grouped_ep_tight_bound_drops_gracefully(mesh_ep4):
     """A binding segment bound behaves like sort-path capacity: finite
     output, dropped rows fall back to the residual (zero layer output)."""

@@ -1,0 +1,151 @@
+"""Property-based routing-equivalence matrix.
+
+One generative suite replaces the hand-picked corners: random draws over
+(gate strategy × dispatch × a2a mode × dtype × ragged token counts)
+assert that ``sharded_moe_apply`` matches the dense per-token reference
+and that sort ≡ grouped ≡ grouped+overlap within per-dtype tolerances.
+
+Two layers of generation:
+
+* the always-run seeded matrix — one deterministic draw per gate
+  strategy (``np.random.RandomState``-seeded, so failures reproduce),
+  alternating the single-device and the 4-way expert-parallel mesh;
+* the hypothesis sweep (slow-marked, hypothesis-optional via
+  ``hypothesis_compat`` — skips cleanly when the package is absent)
+  which searches the same space freely.
+
+Equivalence only holds where every mode computes every token: capacity
+factor is ample (the padded modes drop nothing) and the grouped bound is
+dropless (default).  Stochastic gates (gshard's sampled 2nd expert,
+dense_to_sparse's gumbel noise) stay equivalent because all modes share
+one rng fold per shard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import hypothesis, st
+from repro.core import capacity, gating, moe
+from repro.core.config import GATE_STRATEGIES, MoEConfig
+
+D = 16
+TOL = {"float32": dict(rtol=1e-4, atol=1e-5),
+       "bfloat16": dict(rtol=2e-2, atol=2e-2)}
+
+
+def _gate_kwargs(rs, gate, E):
+    kw = {}
+    if gate == "topk":
+        kw["top_k"] = int(rs.choice([2, 3]))
+    elif gate == "ktop1":
+        kw["num_prototypes"] = int(rs.choice([2, 4]))
+    elif gate == "sam":
+        kw["num_groups"] = int(rs.choice([2, 4]))
+        kw["top_k"] = 2
+    elif gate == "dense_to_sparse":
+        kw["top_k"] = 2
+    return kw
+
+
+def _dense_reference(cfg, params, x, rng, tid, act="swiglu"):
+    """Per-token weighted expert-FFN sum — no dispatch machinery at all.
+    Mirrors the layer's single-shard rng fold (axis index 0)."""
+    S, _ = x.shape
+    E = cfg.num_experts
+    logits = gating.router_logits(cfg, x, params["gate_w"])
+    g = gating.route(cfg, logits, rng=jax.random.fold_in(rng, 0),
+                     token_ids=tid)
+    pe = {k: v for k, v in params.items() if k != "gate_w"}
+    ye = moe.expert_ffn(pe, jnp.broadcast_to(
+        x, (E, S, x.shape[-1])).astype(pe["w_up"].dtype), act)  # (E, S, d)
+    out = jnp.zeros((S, x.shape[-1]), jnp.float32)
+    for k in range(g.expert_index.shape[-1]):
+        rows = ye[g.expert_index[:, k], jnp.arange(S)].astype(jnp.float32)
+        out = out + g.combine_weights[:, k:k + 1] * rows
+    return out
+
+
+def _run_case(mesh, gate, E, kw, S, dtype, a2a, seed):
+    """One matrix draw: dense / sort / grouped / grouped+overlap on the
+    given mesh, all against the dispatch='dense' output (and, on the
+    single-device mesh, against the explicit per-token reference)."""
+    base = dict(num_experts=E, gate=gate, capacity_factor=8.0,
+                a2a=a2a, a2a_inner=2, **kw)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (S, D)).astype(dtype)
+    cfg0 = MoEConfig(**base)
+    params = moe.init_moe_params(key, cfg0, D, 32, E, act="swiglu",
+                                 dtype=jnp.dtype(dtype))
+    tid = (jnp.arange(S, dtype=jnp.int32) * 7 + seed) % 1013
+    rng = jax.random.PRNGKey(seed + 1)
+
+    # the largest chunk count that divides this draw's segment bound
+    # (ragged S on the single-device mesh can make T·K odd)
+    n_dev = mesh.devices.size
+    T_local = (S + (-S) % n_dev) // n_dev
+    M = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    B = (capacity.grouped_segment_bound(cfg0, T_local, M) if M > 1
+         else capacity.grouped_tp_gather_bound(cfg0, T_local))
+    P = next(p for p in (4, 2, 1) if B % p == 0)
+
+    ys, auxes = {}, {}
+    for name, over in (("dense", {"dispatch": "dense"}),
+                       ("sort", {"dispatch": "sort"}),
+                       ("grouped", {"dispatch": "grouped"}),
+                       ("overlap", {"dispatch": "grouped",
+                                    "overlap_chunks": P})):
+        cfg = MoEConfig(**{**base, **over})
+        y, aux, _ = jax.jit(lambda p, v, cfg=cfg: moe.sharded_moe_apply(
+            mesh, cfg, p, v, num_experts=E, act="swiglu", rng=rng,
+            token_ids=tid))(params, x)
+        ys[name] = np.asarray(y, np.float32)
+        auxes[name] = float(aux)
+
+    tol = TOL[jnp.dtype(dtype).name]
+    for name in ("sort", "grouped", "overlap"):
+        np.testing.assert_allclose(
+            ys[name], ys["dense"], err_msg=f"{gate}/{name} vs dense", **tol)
+        np.testing.assert_allclose(auxes[name], auxes["dense"], rtol=1e-5,
+                                   err_msg=f"{gate}/{name} aux")
+    if n_dev == 1:
+        ref = np.asarray(_dense_reference(cfg0, params, x, rng, tid),
+                         np.float32)
+        np.testing.assert_allclose(ys["dense"], ref,
+                                   err_msg=f"{gate} vs reference", **tol)
+    return P
+
+
+# ---------------------------------------------------------------------------
+# always-run seeded matrix: one draw per gate strategy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("i,gate", list(enumerate(GATE_STRATEGIES)))
+def test_routing_equivalence_matrix(i, gate, mesh1, mesh_ep4):
+    rs = np.random.RandomState(4000 + i)
+    E = int(rs.choice([8, 16]))
+    kw = _gate_kwargs(rs, gate, E)
+    S = int(rs.randint(5, 48))               # ragged → exercises padding
+    dtype = ["float32", "bfloat16"][int(rs.randint(2))]
+    a2a = ["flat", "hierarchical"][int(rs.randint(2))]
+    mesh = mesh1 if i % 2 == 0 else mesh_ep4
+    _run_case(mesh, gate, E, kw, S, dtype, a2a, seed=300 + i)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (slow; skips when hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@hypothesis.settings(max_examples=12, deadline=None)
+@hypothesis.given(data=st.data())
+def test_routing_equivalence_hypothesis(data, mesh_ep4):
+    gate = data.draw(st.sampled_from(GATE_STRATEGIES))
+    rs = np.random.RandomState(data.draw(st.integers(0, 2 ** 16)))
+    E = data.draw(st.sampled_from([8, 16]))
+    kw = _gate_kwargs(rs, gate, E)
+    S = data.draw(st.integers(min_value=3, max_value=64))
+    dtype = data.draw(st.sampled_from(["float32", "bfloat16"]))
+    a2a = data.draw(st.sampled_from(["flat", "hierarchical"]))
+    seed = data.draw(st.integers(0, 2 ** 16))
+    _run_case(mesh_ep4, gate, E, kw, S, dtype, a2a, seed)
