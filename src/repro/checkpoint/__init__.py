@@ -1,1 +1,3 @@
-from repro.checkpoint.io import save_checkpoint, restore_checkpoint
+from repro.checkpoint.io import (CheckpointCorruptError, latest_step,
+                                 list_checkpoints, restore_checkpoint,
+                                 save_checkpoint)

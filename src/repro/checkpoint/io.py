@@ -1,21 +1,50 @@
-"""Sharding-aware checkpointing.
+"""Crash-safe, sharding-aware checkpointing.
 
 Single-process format: one ``.npz`` per save with ``/``-joined tree paths
-as keys plus a tiny JSON manifest.  On a real multi-host pod each process
-saves only the shards it owns (``addressable_shards``) into
+as keys plus JSON manifests.  On a real multi-host pod each process saves
+only the shards it owns (``addressable_shards``) into
 ``<dir>/proc<k>.npz`` — the same flat-key format — and restore reassembles
 per-host; the container exercises the single-process path.
+
+Crash safety (a preempted worker must NEVER leave the run unrestorable):
+
+* every file is written **atomically** — tmp file, flush + fsync,
+  ``os.replace`` — so a kill mid-write leaves at worst a stray ``.tmp``;
+* each save writes the ``.npz`` first, then a per-step manifest
+  (``ckpt_<step>.json``) carrying per-leaf CRC32 checksums, then updates
+  the ``manifest.json`` latest-pointer **last**;
+* :func:`restore_checkpoint` walks per-step manifests newest-first and
+  returns the newest checkpoint that is *intact* (loads cleanly, has
+  exactly the manifest's keys, checksums match) — a corrupt or truncated
+  latest falls back to the previous one instead of crashing the resume;
+* ``keep`` retains only the last K checkpoints (never the newest).
+
+Deterministic kill/crash points for the fault harness
+(``core/faults.py``, indexed by step): ``ckpt.data_tmp_written``,
+``ckpt.data_replaced``, ``ckpt.manifest_step_written``.
 """
 from __future__ import annotations
 
+import glob
+import io
 import json
 import os
-from typing import Any, Dict
+import re
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import faults as faults_mod
+
+FORMAT_VERSION = 2
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file is unreadable, truncated, or fails its checksum."""
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -27,31 +56,186 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
-def save_checkpoint(direc: str, state, step: int) -> str:
+def _checksum(arr: np.ndarray) -> int:
+    """CRC32 over raw bytes + dtype/shape (catches silent reinterpretation)."""
+    meta = f"{arr.dtype.str}{arr.shape}".encode()
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes(), zlib.crc32(meta))
+
+
+def _atomic_write(path: str, data: bytes, *, crash_site: Optional[str] = None,
+                  crash_index: int = 0) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    if crash_site is not None:
+        faults_mod.crash_point(crash_site, crash_index)
+    os.replace(tmp, path)
+
+
+def _npz_path(direc: str, step: int) -> str:
+    return os.path.join(direc, f"ckpt_{step:08d}.npz")
+
+
+def _manifest_path(direc: str, step: int) -> str:
+    return os.path.join(direc, f"ckpt_{step:08d}.json")
+
+
+def save_checkpoint(direc: str, state, step: int,
+                    keep: Optional[int] = None) -> str:
+    """Atomically save ``state``; returns the ``.npz`` path.
+
+    ``keep`` prunes all but the newest K checkpoints (and stray ``.tmp``
+    leftovers from killed saves)."""
     os.makedirs(direc, exist_ok=True)
     flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(state).items()}
-    path = os.path.join(direc, f"ckpt_{step:08d}.npz")
-    np.savez(path, **flat)
-    with open(os.path.join(direc, "manifest.json"), "w") as f:
-        json.dump({"latest": path, "step": step,
-                   "keys": sorted(flat.keys())}, f, indent=1)
+    path = _npz_path(direc, step)
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    # data first (atomic): a kill before the manifests leaves an orphan
+    # .npz that restore simply never considers.
+    _atomic_write(path, buf.getvalue(),
+                  crash_site="ckpt.data_tmp_written", crash_index=step)
+    faults_mod.crash_point("ckpt.data_replaced", step)
+    manifest = {
+        "format": FORMAT_VERSION,
+        "step": step,
+        "latest": os.path.basename(path),
+        "keys": sorted(flat.keys()),
+        "checksums": {k: _checksum(v) for k, v in flat.items()},
+    }
+    mdata = json.dumps(manifest, indent=1).encode()
+    # per-step manifest (the restore candidates), then the latest-pointer
+    _atomic_write(_manifest_path(direc, step), mdata)
+    faults_mod.crash_point("ckpt.manifest_step_written", step)
+    _atomic_write(os.path.join(direc, "manifest.json"), mdata)
+    if keep is not None:
+        _prune(direc, keep)
     return path
 
 
-def restore_checkpoint(direc: str, state_template):
-    """Restore into the structure of ``state_template`` (keeps shardings
-    if the template leaves carry them via jax.device_put afterwards)."""
-    with open(os.path.join(direc, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(manifest["latest"])
-    flat_tpl = _flatten(state_template)
-    assert set(flat_tpl) == set(data.files), (
-        sorted(set(flat_tpl) ^ set(data.files))[:10])
-    leaves_by_key = {k: jnp.asarray(data[k]) for k in data.files}
-    paths, treedef = jax.tree_util.tree_flatten_with_path(state_template)
-    new_leaves = []
-    for path, leaf in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        new_leaves.append(leaves_by_key[key].astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["step"]
+def _prune(direc: str, keep: int) -> None:
+    for tmp in glob.glob(os.path.join(direc, "*.tmp")):
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+    for step, _ in list_checkpoints(direc)[max(keep, 1):]:
+        for p in (_npz_path(direc, step), _manifest_path(direc, step)):
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+
+
+def list_checkpoints(direc: str) -> List[Tuple[int, Dict]]:
+    """(step, manifest) candidates, newest first.  Per-step manifests are
+    authoritative; a legacy dir with only ``manifest.json`` still lists
+    its single entry.  Unparseable manifests are skipped (a torn manifest
+    must not block restore of an older checkpoint)."""
+    out: List[Tuple[int, Dict]] = []
+    seen = set()
+    for mp in glob.glob(os.path.join(direc, "ckpt_*.json")):
+        m = re.fullmatch(r"ckpt_(\d+)\.json", os.path.basename(mp))
+        if not m:
+            continue
+        try:
+            with open(mp) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError):
+            continue
+        out.append((int(m.group(1)), manifest))
+        seen.add(int(m.group(1)))
+    legacy = os.path.join(direc, "manifest.json")
+    if os.path.exists(legacy):
+        try:
+            with open(legacy) as f:
+                manifest = json.load(f)
+            if manifest.get("step") not in seen:
+                out.append((manifest["step"], manifest))
+        except (OSError, ValueError, KeyError):
+            pass
+    return sorted(out, key=lambda t: t[0], reverse=True)
+
+
+def latest_step(direc: str) -> Optional[int]:
+    """Newest candidate step, or None when the dir holds no checkpoints
+    (missing dir included) — the ``--resume`` probe."""
+    if not os.path.isdir(direc):
+        return None
+    cands = list_checkpoints(direc)
+    return cands[0][0] if cands else None
+
+
+def _load_verified(direc: str, manifest: Dict) -> Dict[str, np.ndarray]:
+    """Load the manifest's ``.npz`` and verify keys + checksums; any
+    failure mode (missing/truncated/bit-rotted file, zip errors, checksum
+    mismatch) raises :class:`CheckpointCorruptError`."""
+    latest = manifest["latest"]
+    path = latest if os.path.isabs(latest) else os.path.join(direc, latest)
+    try:
+        with np.load(path) as data:
+            arrays = {k: data[k] for k in data.files}
+    except Exception as e:  # zipfile.BadZipFile, OSError, EOFError, ValueError…
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r} is unreadable ({type(e).__name__}: {e})")
+    want = set(manifest.get("keys", arrays.keys()))
+    if set(arrays) != want:
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r} keys disagree with its manifest: "
+            f"missing {sorted(want - set(arrays))[:5]}, "
+            f"unexpected {sorted(set(arrays) - want)[:5]}")
+    sums = manifest.get("checksums")
+    if sums:
+        bad = [k for k, a in arrays.items()
+               if k in sums and _checksum(a) != sums[k]]
+        if bad:
+            raise CheckpointCorruptError(
+                f"checkpoint {path!r} failed checksum verification for "
+                f"{len(bad)} leaves (first: {sorted(bad)[:3]})")
+    return arrays
+
+
+def restore_checkpoint(direc: str, state_template, *, fallback: bool = True):
+    """Restore into the structure of ``state_template`` → (state, step).
+
+    Walks candidates newest-first; a corrupt/truncated checkpoint is
+    skipped (with a warning) in favour of the newest *intact* one unless
+    ``fallback=False``.  Raises :class:`CheckpointCorruptError` when no
+    candidate survives, FileNotFoundError when the dir has none at all,
+    and ValueError when an intact checkpoint's keys don't match the
+    template (wrong model — missing and unexpected keys named separately).
+    """
+    candidates = list_checkpoints(direc)
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint manifests under {direc!r}")
+    errors: List[str] = []
+    for step, manifest in candidates:
+        try:
+            arrays = _load_verified(direc, manifest)
+        except CheckpointCorruptError as e:
+            errors.append(str(e))
+            if not fallback:
+                raise
+            print(f"checkpoint: step {step} corrupt, falling back ({e})")
+            continue
+        flat_tpl = _flatten(state_template)
+        missing = sorted(set(flat_tpl) - set(arrays))
+        unexpected = sorted(set(arrays) - set(flat_tpl))
+        if missing or unexpected:
+            raise ValueError(
+                f"checkpoint step {step} does not match the restore "
+                f"template: missing keys {missing[:10]} "
+                f"(+{max(len(missing) - 10, 0)} more), unexpected keys "
+                f"{unexpected[:10]} (+{max(len(unexpected) - 10, 0)} more)")
+        paths, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+        new_leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            new_leaves.append(jnp.asarray(arrays[key]).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+    raise CheckpointCorruptError(
+        f"no intact checkpoint under {direc!r}; tried {len(candidates)} "
+        f"candidate(s): " + "; ".join(errors))

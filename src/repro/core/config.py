@@ -266,6 +266,34 @@ class TrainConfig:
     optimizer_state_dtype: str = "float32"   # "bfloat16" for the giant configs
     schedule: str = "cosine"
     seed: int = 0
+    # -- fault tolerance (training/train_step.py skip-step guard) ----------
+    # Loss scaling for bf16 stability: a float is a static scale (1.0 = off);
+    # "dynamic" starts at 2^15, halves on every non-finite step, and doubles
+    # after loss_scale_growth_interval consecutive finite steps (capped).
+    loss_scale: object = 1.0           # float | "dynamic"
+    loss_scale_growth_interval: int = 200
+    # Non-finite steps are skipped (params/opt state untouched); the driver
+    # fails fast once this many CONSECUTIVE steps have been skipped.
+    max_skipped_steps: int = 25
+
+    def __post_init__(self):
+        if self.loss_scale != "dynamic":
+            try:
+                ok = float(self.loss_scale) > 0
+            except (TypeError, ValueError):
+                ok = False
+            if not ok:
+                raise ValueError(
+                    f"TrainConfig.loss_scale must be a positive float or "
+                    f"'dynamic', got {self.loss_scale!r}")
+        if self.loss_scale_growth_interval < 1:
+            raise ValueError(
+                f"TrainConfig.loss_scale_growth_interval must be >= 1, got "
+                f"{self.loss_scale_growth_interval}")
+        if self.max_skipped_steps < 1:
+            raise ValueError(
+                f"TrainConfig.max_skipped_steps must be >= 1, got "
+                f"{self.max_skipped_steps}")
 
 
 @dataclass(frozen=True)

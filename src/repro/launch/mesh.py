@@ -44,6 +44,31 @@ def make_smoke_mesh(shape: Tuple[int, ...] = (1, 1),
     return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 
+def parse_mesh(spec: str) -> Tuple[int, ...]:
+    """Parse a ``--mesh`` string like ``1x1`` / ``16x16`` into a shape
+    tuple, with a clear error for typos (``16x``, ``axb``, ``0x4``)."""
+    parts = str(spec).split("x")
+    try:
+        dims = tuple(int(p) for p in parts)
+    except ValueError:
+        dims = ()
+    if not dims or any(d < 1 for d in dims):
+        raise ValueError(
+            f"--mesh expects 'DxM' with positive integers (e.g. '1x1', "
+            f"'16x16', or '2x16x16' for multi-pod), got {spec!r}")
+    return dims
+
+
+def mesh_cli_arg(spec: str):
+    """argparse ``type=`` adapter for :func:`parse_mesh` (argparse prints
+    ArgumentTypeError messages verbatim; bare ValueError it swallows)."""
+    import argparse
+    try:
+        return parse_mesh(spec)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e))
+
+
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
@@ -164,17 +189,21 @@ def param_shardings(mesh: Mesh, params_shapes, *, fsdp: bool = True,
 
 
 def state_shardings(mesh: Mesh, state_shapes, *, fsdp: bool = None) -> Any:
-    """Shardings for a TrainState(params, opt{m,v,count}, step)."""
+    """Shardings for a TrainState: params/moments per the rules, every
+    other field (step + the fault-tolerance scalars) replicated."""
     if fsdp is None:
         fsdp = needs_fsdp(mesh, state_shapes.params)
     p = param_shardings(mesh, state_shapes.params, fsdp=fsdp)
     repl = NamedSharding(mesh, P())
+    scalars = {f: (None if getattr(state_shapes, f) is None else repl)
+               for f in type(state_shapes)._fields
+               if f not in ("params", "opt")}
     return type(state_shapes)(
         params=p,
         opt={"m": param_shardings(mesh, state_shapes.opt["m"], fsdp=fsdp),
              "v": param_shardings(mesh, state_shapes.opt["v"], fsdp=fsdp),
              "count": repl},
-        step=repl)
+        **scalars)
 
 
 def batch_shardings(mesh: Mesh, batch_shapes) -> Any:

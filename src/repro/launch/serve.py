@@ -47,12 +47,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--mesh", default="1x1", type=mesh_lib.mesh_cli_arg)
     args = ap.parse_args()
     run(args.arch, smoke=args.smoke, batch=args.batch,
         prompt_len=args.prompt_len, gen=args.gen,
-        temperature=args.temperature,
-        mesh_shape=tuple(int(x) for x in args.mesh.split("x")))
+        temperature=args.temperature, mesh_shape=args.mesh)
 
 
 if __name__ == "__main__":

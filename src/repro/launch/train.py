@@ -1,4 +1,4 @@
-"""End-to-end training driver.
+"""End-to-end training driver with crash-safe resume.
 
 CPU-scale usage (the examples use this):
   PYTHONPATH=src python -m repro.launch.train --arch hetumoe-paper-16e \\
@@ -7,6 +7,18 @@ CPU-scale usage (the examples use this):
 On a real pod the same driver runs with ``--mesh 16x16`` under the
 production mesh; data parallel input feeding is per-host via the
 deterministic synthetic pipeline (every host generates its shard).
+
+Fault tolerance: ``--ckpt-every N`` saves atomically every N steps
+(keep-last ``--ckpt-keep``); ``--resume`` restores the newest *intact*
+checkpoint and continues — because the synthetic pipeline and rng are
+keyed by the global step, a killed-and-resumed run reproduces the
+uninterrupted loss trajectory bitwise.  Non-finite steps are skipped by
+the train step (see ``training/train_step.py``); the driver fails fast
+once ``TrainConfig.max_skipped_steps`` CONSECUTIVE steps were skipped.
+``--history-out`` dumps the per-step metric history as JSON so resume
+tests and bench tooling diff trajectories without parsing stdout, and
+``--inject site:mode@steps`` arms the deterministic fault harness
+(``core/faults.py``) from the CLI.
 """
 from __future__ import annotations
 
@@ -17,48 +29,80 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
+from repro.core import faults as faults_mod
 from repro.core.config import TrainConfig
 from repro.data import SyntheticLM
 from repro.launch import mesh as mesh_lib
 from repro.training import make_train_step
 from repro.training.train_step import init_train_state
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 
 
 def run(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
         lr: float = 3e-3, microbatches: int = 1, remat: str = "none",
         mesh_shape=(1, 1), log_every: int = 10, ckpt_dir: str = None,
-        seed: int = 0):
+        ckpt_every: int = None, ckpt_keep: int = 3, resume: bool = False,
+        seed: int = 0, loss_scale="none", history_out: str = None,
+        faults: faults_mod.FaultPlan = None):
+    if (ckpt_every or resume) and not ckpt_dir:
+        raise ValueError("--ckpt-every/--resume require --ckpt-dir")
     cfg = configs.smoke_config(arch) if smoke else configs.get_config(arch)
+    ls = 1.0 if loss_scale in (None, "none") else (
+        "dynamic" if loss_scale == "dynamic" else float(loss_scale))
     tcfg = TrainConfig(learning_rate=lr, warmup_steps=max(steps // 10, 1),
                        total_steps=steps, microbatches=microbatches,
-                       remat=remat, seed=seed)
+                       remat=remat, seed=seed, loss_scale=ls)
     mesh = mesh_lib.make_smoke_mesh(tuple(mesh_shape))
     rng = jax.random.PRNGKey(seed)
     state = init_train_state(rng, cfg, tcfg)
+    start = 0
+    if resume:
+        if latest_step(ckpt_dir) is not None:
+            state, start = restore_checkpoint(ckpt_dir, state)
+            print(f"resumed from step {start} ({ckpt_dir})")
+        else:
+            print(f"--resume: no checkpoint under {ckpt_dir}, starting fresh")
     n_params = sum(np.prod(p.shape) for p in jax.tree.leaves(state.params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M mesh={dict(mesh.shape)}")
     ds = SyntheticLM(cfg, batch=batch, seq_len=seq, seed=seed)
-    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh), donate_argnums=(0,))
+    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh, faults=faults),
+                      donate_argnums=(0,))
     history = []
     t0 = time.time()
-    for s in range(steps):
-        bt = ds.next_batch(s)
-        state, m = step_fn(state, bt, jax.random.fold_in(rng, s))
-        if s % log_every == 0 or s == steps - 1:
+    with faults_mod.active(faults):
+        for s in range(start, steps):
+            faults_mod.crash_point("train.loop", index=s)
+            bt = ds.next_batch(s)
+            state, m = step_fn(state, bt, jax.random.fold_in(rng, s))
             m = {k: float(v) for k, v in m.items()}
-            dt = time.time() - t0
-            tput = batch * seq * (s + 1) / max(dt, 1e-9)
-            print(f"step {s:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
-                  f"aux {m['aux']:.4f} gnorm {m['grad_norm']:.2f} "
-                  f"tok/s {tput:,.0f}")
             history.append({"step": s, **m})
+            if s % log_every == 0 or s == steps - 1:
+                dt = time.time() - t0
+                tput = batch * seq * (s + 1 - start) / max(dt, 1e-9)
+                print(f"step {s:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                      f"aux {m['aux']:.4f} gnorm {m['grad_norm']:.2f} "
+                      f"skip {m['skipped']:.0f} streak "
+                      f"{m['nonfinite_streak']:.0f} tok/s {tput:,.0f}")
+            if m["nonfinite_streak"] >= tcfg.max_skipped_steps:
+                raise RuntimeError(
+                    f"aborting at step {s}: {int(m['nonfinite_streak'])} "
+                    f"consecutive non-finite steps were skipped (>= "
+                    f"max_skipped_steps={tcfg.max_skipped_steps}) — the run "
+                    f"is diverging; restore an earlier checkpoint, lower the "
+                    f"lr, or enable loss_scale='dynamic'")
+            if ckpt_every and (s + 1) % ckpt_every == 0 and s + 1 < steps:
+                save_checkpoint(ckpt_dir, state, s + 1, keep=ckpt_keep)
     if ckpt_dir:
-        save_checkpoint(ckpt_dir, state, steps)
+        save_checkpoint(ckpt_dir, state, steps, keep=ckpt_keep)
         print("checkpoint saved to", ckpt_dir)
+    if history_out:
+        with open(history_out, "w") as f:
+            json.dump({"arch": cfg.name, "steps": steps, "start": start,
+                       "resumed": bool(resume and start), "seed": seed,
+                       "history": history}, f, indent=1)
+        print("history written to", history_out)
     return state, history
 
 
@@ -73,14 +117,33 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="none", choices=["none", "block", "full"])
-    ap.add_argument("--mesh", default="1x1",
+    ap.add_argument("--mesh", default="1x1", type=mesh_lib.mesh_cli_arg,
                     help="DxM data×model mesh, e.g. 1x1 (CPU) or 16x16")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="save an atomic checkpoint every N steps")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="retain only the newest K checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest intact checkpoint in --ckpt-dir")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loss-scale", default="none",
+                    help="'none', 'dynamic', or a static float (bf16 stability)")
+    ap.add_argument("--history-out", default=None,
+                    help="dump the per-step metric history as JSON")
+    ap.add_argument("--inject", action="append", default=[],
+                    help="fault spec 'site:mode@steps' (repeatable), e.g. "
+                         "'train.grads:nan@3' or 'ckpt.data_tmp_written:kill@20'")
     args = ap.parse_args()
-    mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
+    faults = faults_mod.plan_from_specs(args.inject) if args.inject else None
     run(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
         smoke=args.smoke, lr=args.lr, microbatches=args.microbatches,
-        remat=args.remat, mesh_shape=mesh_shape, ckpt_dir=args.ckpt_dir)
+        remat=args.remat, mesh_shape=args.mesh, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, ckpt_keep=args.ckpt_keep,
+        resume=args.resume, log_every=args.log_every, seed=args.seed,
+        loss_scale=args.loss_scale, history_out=args.history_out,
+        faults=faults)
 
 
 if __name__ == "__main__":

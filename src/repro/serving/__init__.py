@@ -1,1 +1,2 @@
 from repro.serving.engine import make_prefill_step, make_serve_step, generate
+from repro.serving.scheduler import Request, SlotServer

@@ -1,4 +1,5 @@
-"""Continuous-batching serving scheduler (slot-based).
+"""Continuous-batching serving scheduler (slot-based) with overload
+degradation.
 
 The decode dry-run shapes assume a full static batch; a real server
 receives ragged requests.  This scheduler keeps a fixed-size slot pool
@@ -8,20 +9,64 @@ cache; finished/evicted slots are refilled mid-flight.  Per-slot cache
 insertion uses a batched dynamic-update along the batch axis, so the hot
 decode loop never recompiles.
 
+Fault tolerance / overload degradation:
+
+* **admission**: requests are validated up front (prompt length vs
+  ``cache_len``, token range vs the vocab, ``max_new``) and rejected with
+  a structured status instead of corrupting the shared batched cache —
+  an oversized prompt previously scribbled past its slot via
+  ``dynamic_update_slice``;
+* **backpressure**: a bounded admission queue (``queue_limit``) rejects
+  with ``status="rejected", error="queue_full"`` once full, so one burst
+  cannot grow host memory without bound;
+* **poisoned-request containment**: a prefill that raises or yields
+  non-finite logits marks THAT request ``failed`` and frees the slot
+  without committing its cache writes; a slot whose decode logits go
+  non-finite is likewise failed and freed while the rest of the batch
+  keeps decoding;
+* **deadlines**: ``Request.deadline_steps`` (or the server-wide
+  ``default_deadline_steps``) evicts a request after that many decode
+  steps, bounding the time one slot can be held (``max_new`` already
+  bounds the token budget).
+
+Aligned refill: the per-layer decode caches carry ONE scalar ``pos``
+shared by every slot, and a prefill resets it to the new prompt's length
+— so an unaligned mid-flight prefill silently corrupts every other
+in-flight slot's attention mask and rope positions (the seed's scheduler
+only survived because its smoke test used symmetric requests that finish
+together).  Until the caches grow per-slot positions, admission is gated
+on alignment: a queued request is prefilled only when no slot is active
+(pos resets cleanly) or its prompt length equals the current shared pos
+(the reset is a no-op).  The queue is scanned first-fit, so an aligned
+request behind a misaligned head still gets its slot.
+
+Fault-injection seams (``core/faults.py``): ``serve.prefill`` /
+``serve.prefill_logits`` (indexed by request uid), ``serve.step_logits``
+(uid), ``serve.step`` (decode-step counter; ``stall`` mode simulates a
+slow step without wall-clock flakiness — deadlines count steps, not
+seconds).
+
 CPU-scale but structurally the production pattern (vLLM-style slots
 without paging — the ring/linear caches are contiguous per slot).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults as faults_mod
 from repro.core.config import ModelConfig
 from repro.models import transformer as T
 from repro.serving.engine import make_serve_step
+
+# terminal request statuses (Request.done=True implies one of these)
+TERMINAL_STATUSES = ("ok", "rejected", "failed", "evicted")
 
 
 @dataclass
@@ -31,22 +76,37 @@ class Request:
     max_new: int
     out: List[int] = field(default_factory=list)
     done: bool = False
+    status: str = "pending"          # pending|queued|active|ok|rejected|failed|evicted
+    error: Optional[str] = None      # structured rejection/failure reason
+    deadline_steps: Optional[int] = None  # decode-step budget (None = server default)
+    steps_used: int = 0              # decode steps consumed while active
 
 
 class SlotServer:
     """Fixed-slot continuous batching over one compiled serve_step."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
-                 cache_len: int, mesh=None, eos_id: Optional[int] = None):
+                 cache_len: int, mesh=None, eos_id: Optional[int] = None,
+                 queue_limit: Optional[int] = None,
+                 default_deadline_steps: Optional[int] = None):
         assert cfg.has_decode and cfg.frontend is None
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(
+                f"SlotServer queue_limit must be >= 1 or None (unbounded), "
+                f"got {queue_limit}")
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.slots = slots
         self.cache_len = cache_len
         self.eos_id = eos_id
+        self.queue_limit = queue_limit
+        self.default_deadline_steps = default_deadline_steps
         self.caches = T.init_caches(cfg, slots, cache_len,
                                     dtype=jnp.dtype(cfg.dtype))
         self.active: Dict[int, Request] = {}          # slot → request
+        self.queue: Deque[Request] = deque()          # admitted, awaiting a slot
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._decode_steps = 0
+        self._pos = 0            # host mirror of the caches' shared pos scalar
         self._step = jax.jit(make_serve_step(cfg, mesh))
         # per-slot prefill: full-batch forward on a (1, S) prompt, then
         # scatter its caches into slot i of the batched cache tree
@@ -67,45 +127,171 @@ class SlotServer:
                     (0, slot) + (0,) * (full.ndim - 2))
             return one.astype(full.dtype)               # scalars (pos)
 
-        return jnp.argmax(logits[0, -1]), jax.tree.map(put, caches, sub)
+        return logits[0, -1], jax.tree.map(put, caches, sub)
+
+    # -- validation / admission ---------------------------------------------
+    def _validate(self, req: Request) -> Optional[str]:
+        """Structured rejection reason, or None if admissible."""
+        n = int(np.asarray(req.prompt).shape[-1]) if req.prompt.ndim else 0
+        if req.prompt.ndim != 1 or n < 1:
+            return f"bad_prompt_shape:{tuple(req.prompt.shape)}"
+        # prefill writes n cache rows and every decode step writes one
+        # more; n > cache_len - 1 would scribble past the slot's cache
+        if n > self.cache_len - 1:
+            return f"prompt_too_long:{n}>cache_len-1={self.cache_len - 1}"
+        toks = np.asarray(req.prompt)
+        if toks.min() < 0 or toks.max() >= self.cfg.vocab_size:
+            return (f"token_out_of_range:[{int(toks.min())},"
+                    f"{int(toks.max())}]∉[0,{self.cfg.vocab_size})")
+        if req.max_new < 1:
+            return f"bad_max_new:{req.max_new}"
+        return None
+
+    def _reject(self, req: Request, reason: str) -> None:
+        req.status, req.error, req.done = "rejected", reason, True
+
+    def enqueue(self, req: Request) -> bool:
+        """Admit into the bounded queue.  False = terminally rejected
+        (validation failure, or backpressure when the queue is full)."""
+        reason = self._validate(req)
+        if reason is not None:
+            self._reject(req, reason)
+            return False
+        if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
+            self._reject(req, "queue_full")
+            return False
+        req.status = "queued"
+        self.queue.append(req)
+        return True
+
+    def _aligned(self, req: Request) -> bool:
+        """True when prefilling ``req`` now cannot corrupt in-flight
+        slots: either no slot is active (the shared pos resets cleanly)
+        or the prompt length equals the current shared pos (the reset is
+        a no-op).  See the module docstring."""
+        return not self.active or int(req.prompt.shape[-1]) == self._pos
+
+    def _admit(self, req: Request, slot: int) -> bool:
+        """Prefill into ``slot``.  A prefill that raises or yields
+        non-finite logits fails the request WITHOUT committing its cache
+        writes (the slot stays clean for the next request).  True =
+        the slot is now occupied."""
+        try:
+            faults_mod.crash_point("serve.prefill", index=req.uid)
+            logits, new_caches = self._prefill(req.prompt[None, :],
+                                               self.caches, slot)
+            lg = faults_mod.inject_array("serve.prefill_logits", logits,
+                                         index=req.uid)
+            if not np.all(np.isfinite(lg)):
+                raise faults_mod.FaultInjected("non-finite prefill logits")
+        except Exception as e:  # containment: poisoned request, not the server
+            req.status, req.error, req.done = "failed", f"prefill:{e}", True
+            return False
+        tok = int(np.argmax(lg))
+        self.caches = new_caches
+        self._pos = int(req.prompt.shape[-1])
+        self.tokens = self.tokens.at[slot, 0].set(tok)
+        req.out.append(tok)
+        req.status = "active"
+        self.active[slot] = req
+        return True
 
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> bool:
-        """Claim a free slot; False if the pool is full."""
+        """Claim a free slot directly (legacy API).  False = no slot can
+        take the request right now (pool full, or refill not aligned —
+        retry later); True = the request was consumed: admitted, or
+        terminally rejected/failed (check ``req.status``)."""
+        reason = self._validate(req)
+        if reason is not None:
+            self._reject(req, reason)
+            return True
+        if not self._aligned(req):
+            return False
         for s in range(self.slots):
             if s not in self.active:
-                tok, self.caches = self._prefill(req.prompt[None, :],
-                                                 self.caches, s)
-                self.tokens = self.tokens.at[s, 0].set(tok)
-                req.out.append(int(tok))
-                self.active[s] = req
+                self._admit(req, s)   # failed prefill still consumes req
                 return True
         return False
 
+    def pump(self) -> List[Request]:
+        """Move queued requests into free slots (first-fit over the queue
+        — only alignment-safe refills, see ``_aligned``); returns
+        requests that terminally failed during prefill."""
+        failed = []
+        for s in range(self.slots):
+            if s in self.active:
+                continue
+            for req in list(self.queue):
+                if not self._aligned(req):
+                    continue
+                self.queue.remove(req)
+                if self._admit(req, s):
+                    break
+                failed.append(req)
+        return failed
+
+    def _deadline(self, req: Request) -> Optional[int]:
+        return (req.deadline_steps if req.deadline_steps is not None
+                else self.default_deadline_steps)
+
     def step(self) -> List[Request]:
         """One batched decode step for every active slot; returns newly
-        finished requests (their slots are freed)."""
+        finished requests — ok, failed (non-finite logits) or evicted
+        (deadline) — with their slots freed."""
         if not self.active:
             return []
+        faults_mod.maybe_stall("serve.step", index=self._decode_steps)
+        self._decode_steps += 1
+        self._pos += 1
         logits, self.caches = self._step(self.params, self.tokens, self.caches)
-        self.tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        lg = np.asarray(logits[:, -1].astype(jnp.float32))
         finished = []
+        next_tokens = np.asarray(self.tokens).copy()
         for s, req in list(self.active.items()):
-            tok = int(self.tokens[s, 0])
-            req.out.append(tok)
-            if len(req.out) >= req.max_new or (self.eos_id is not None
-                                               and tok == self.eos_id):
-                req.done = True
+            row = faults_mod.inject_array("serve.step_logits", lg[s],
+                                          index=req.uid)
+            req.steps_used += 1
+            if not np.all(np.isfinite(row)):
+                # poisoned mid-decode: fail THIS request, free the slot —
+                # its cache line is fully overwritten by the next prefill,
+                # so the other slots never see the damage
+                req.status, req.error, req.done = \
+                    "failed", "non_finite_decode_logits", True
                 finished.append(req)
                 del self.active[s]
+                continue
+            tok = int(np.argmax(row))
+            next_tokens[s, 0] = tok
+            req.out.append(tok)
+            dl = self._deadline(req)
+            if len(req.out) >= req.max_new or (self.eos_id is not None
+                                               and tok == self.eos_id):
+                req.status, req.done = "ok", True
+                finished.append(req)
+                del self.active[s]
+            elif dl is not None and req.steps_used >= dl:
+                req.status, req.error, req.done = "evicted", "deadline", True
+                finished.append(req)
+                del self.active[s]
+        self.tokens = jnp.asarray(next_tokens)
         return finished
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Drive a request list to completion with continuous refill."""
+        """Drive a request list to completion with continuous refill.
+        Returns EVERY request once terminal (``ok``/``rejected``/
+        ``failed``/``evicted``) — a mixed workload with oversized or
+        poisoned requests still drains the healthy ones."""
         pending = list(requests)
         done: List[Request] = []
-        while pending or self.active:
-            while pending and self.submit(pending[0]):
-                pending.pop(0)
+        while pending or self.queue or self.active:
+            # feed with backpressure: only hand the queue what it has room
+            # for, so a huge batch never trips its own queue_limit
+            while pending and (self.queue_limit is None
+                               or len(self.queue) < self.queue_limit):
+                req = pending.pop(0)
+                if not self.enqueue(req):
+                    done.append(req)          # validation rejection
+            done += self.pump()               # prefill failures
             done += self.step()
         return done

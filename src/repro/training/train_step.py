@@ -1,4 +1,5 @@
-"""Train step: chunked CE loss, gradient accumulation, clipping, AdamW.
+"""Train step: chunked CE loss, gradient accumulation, clipping, AdamW,
+and the non-finite skip-step guard.
 
 Chunked cross-entropy: the unembed + softmax-CE is scanned over sequence
 chunks so the full (B, S, V) logits tensor is NEVER materialized — at
@@ -8,6 +9,18 @@ recorded in EXPERIMENTS.md §Perf.
 
 Gradient accumulation: ``lax.scan`` over microbatches (the standard
 jax idiom — one compiled step regardless of accumulation factor).
+
+Skip-step guard (fault tolerance): one NaN/Inf gradient must not corrupt
+the optimizer state — the step's update is suppressed with ``jnp.where``
+(params, moments, AND the Adam bias-correction count stay bitwise
+unchanged) and ``TrainState`` carries ``skipped`` / ``nonfinite_streak``
+counters so the driver can fail fast after ``tcfg.max_skipped_steps``
+consecutive bad steps.  ``tcfg.loss_scale`` adds (static or dynamic)
+loss scaling for bf16: the loss is scaled before the backward, grads are
+unscaled before clipping, and in "dynamic" mode the scale halves on a
+bad step and doubles after ``loss_scale_growth_interval`` good ones.
+Injection seams for the fault harness (``core/faults.py``):
+``train.activations``, ``train.loss``, ``train.grads``.
 """
 from __future__ import annotations
 
@@ -18,22 +31,43 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import faults as faults_mod
 from repro.core.config import ModelConfig, TrainConfig
 from repro.models import transformer as T
 from repro.optim import adamw_update, clip_by_global_norm, init_opt_state, make_schedule
+
+# dynamic loss scaling bounds (standard mixed-precision choices)
+_DYNAMIC_SCALE_INIT = 2.0 ** 15
+_SCALE_MIN = 1.0
+_SCALE_MAX = 2.0 ** 24
 
 
 class TrainState(NamedTuple):
     params: Any
     opt: Dict
     step: jax.Array
+    # fault-tolerance counters (None only in legacy 3-field construction;
+    # init_train_state always fills real scalars)
+    skipped: Any = None            # i32: total skipped (non-finite) steps
+    nonfinite_streak: Any = None   # i32: CONSECUTIVE skipped steps
+    good_streak: Any = None        # i32: consecutive finite steps (scale growth)
+    loss_scale: Any = None         # f32: current loss scale
+
+
+def init_loss_scale(tcfg: TrainConfig) -> float:
+    return (_DYNAMIC_SCALE_INIT if tcfg.loss_scale == "dynamic"
+            else float(tcfg.loss_scale))
 
 
 def init_train_state(rng: jax.Array, cfg: ModelConfig,
                      tcfg: TrainConfig) -> TrainState:
     params = T.init_model(rng, cfg)
-    return TrainState(params, init_opt_state(params, tcfg),
-                      jnp.zeros((), jnp.int32))
+    # distinct zero buffers: donated state must not alias across leaves
+    zero = lambda: jnp.zeros((), jnp.int32)
+    return TrainState(params, init_opt_state(params, tcfg), zero(),
+                      skipped=zero(), nonfinite_streak=zero(),
+                      good_streak=zero(),
+                      loss_scale=jnp.float32(init_loss_scale(tcfg)))
 
 
 def _auto_chunks(S: int, V: int) -> int:
@@ -75,28 +109,48 @@ def chunked_ce_loss(params, cfg: ModelConfig, h: jax.Array, targets: jax.Array,
     return tot / jnp.maximum(cnt, 1.0)
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+def _tree_where(ok, new, old):
+    """Per-leaf select: ``new`` on a finite step, ``old`` (bitwise) on a
+    skipped one.  ``jnp.where(False, nan, x)`` returns ``x`` unchanged."""
+    return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, old)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None,
+                    faults: Optional[faults_mod.FaultPlan] = None):
     """Returns train_step(state, batch, rng) → (state, metrics).
 
     ``batch`` holds the GLOBAL batch; with ``tcfg.microbatches > 1`` it is
     split on the batch axis and accumulated via scan.
+
+    ``faults`` (a ``core.faults.FaultPlan``) arms the traced injection
+    seams at trace time; None (production) inserts no extra ops.
     """
     sched = make_schedule(tcfg)
-
-    def loss_fn(params, mb, rng):
-        h, aux, _ = T.forward(params, mb["inputs"], cfg, mesh=mesh, rng=rng,
-                              remat=tcfg.remat)
-        ce = chunked_ce_loss(params, cfg, h, mb["targets"], mb["loss_mask"],
-                             mesh)
-        return ce + aux, (ce, aux)
-
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    dynamic = tcfg.loss_scale == "dynamic"
+    static_scale = not dynamic and float(tcfg.loss_scale) == 1.0
 
     def train_step(state: TrainState, batch, rng) -> Tuple[TrainState, Dict]:
         mbs = tcfg.microbatches
+        scale = (jnp.float32(1.0) if static_scale
+                 else state.loss_scale.astype(jnp.float32))
+
+        def loss_fn(params, mb, r):
+            h, aux, _ = T.forward(params, mb["inputs"], cfg, mesh=mesh, rng=r,
+                                  remat=tcfg.remat)
+            h = faults_mod.apply_traced(faults, "train.activations",
+                                        state.step, h)
+            ce = chunked_ce_loss(params, cfg, h, mb["targets"],
+                                 mb["loss_mask"], mesh)
+            loss = ce + aux
+            loss = faults_mod.apply_traced(faults, "train.loss",
+                                           state.step, loss)
+            scaled = loss if static_scale else loss * scale
+            return scaled, (loss, ce, aux)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
         if mbs == 1:
-            (loss, (ce, aux)), grads = grad_fn(state.params, batch, rng)
+            (_, (loss, ce, aux)), grads = grad_fn(state.params, batch, rng)
         else:
             def split(x):
                 return x.reshape(mbs, x.shape[0] // mbs, *x.shape[1:])
@@ -105,7 +159,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
 
             def body(acc, xs):
                 mb, r = xs
-                (l, (c, a)), g = grad_fn(state.params, mb, r)
+                (_, (l, c, a)), g = grad_fn(state.params, mb, r)
                 gacc, lacc, cacc, aacc = acc
                 gacc = jax.tree.map(jnp.add, gacc, g)
                 return (gacc, lacc + l, cacc + c, aacc + a), None
@@ -117,12 +171,53 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
             grads = jax.tree.map(lambda g: g / mbs, grads)
             loss, ce, aux = loss / mbs, ce / mbs, aux / mbs
 
+        grads = faults_mod.apply_traced(faults, "train.grads", state.step,
+                                        grads)
+
+        # -- non-finite guard ---------------------------------------------
+        # Under single-controller jit these arrays are global, so reducing
+        # them IS the cross-device all-reduce of the isfinite check (XLA
+        # inserts the collective for sharded leaves).
+        ok = jnp.isfinite(loss)
+        for g in jax.tree.leaves(grads):
+            ok = ok & jnp.all(jnp.isfinite(g))
+
+        if not static_scale:
+            # unscale AFTER the finite check (an overflowed Inf grad must
+            # be seen as non-finite, not Inf/scale); skipped steps never
+            # consume the unscaled values.
+            inv = (jnp.float32(1.0) / scale)
+            grads = jax.tree.map(lambda g: (g * inv.astype(g.dtype)), grads)
+
         grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         lr = sched(state.step)
         new_params, new_opt = adamw_update(grads, state.opt, state.params,
                                            tcfg, lr)
+        # bad step: params, moments AND the bias-correction count keep
+        # their old bits — the update never happened.
+        new_params = _tree_where(ok, new_params, state.params)
+        new_opt = _tree_where(ok, new_opt, state.opt)
+
+        oki = ok.astype(jnp.int32)
+        skipped = state.skipped + (1 - oki)
+        streak = jnp.where(ok, 0, state.nonfinite_streak + 1)
+        good = jnp.where(ok, state.good_streak + 1, 0)
+        if dynamic:
+            grow = ok & (good >= tcfg.loss_scale_growth_interval)
+            new_scale = jnp.where(
+                ok,
+                jnp.where(grow, jnp.minimum(scale * 2.0, _SCALE_MAX), scale),
+                jnp.maximum(scale * 0.5, _SCALE_MIN))
+            good = jnp.where(grow, 0, good)
+        else:
+            new_scale = state.loss_scale
+
         metrics = {"loss": loss, "ce": ce, "aux": aux,
-                   "grad_norm": gnorm, "lr": lr}
-        return TrainState(new_params, new_opt, state.step + 1), metrics
+                   "grad_norm": gnorm, "lr": lr,
+                   "skipped": skipped, "nonfinite_streak": streak,
+                   "loss_scale": new_scale}
+        return TrainState(new_params, new_opt, state.step + 1,
+                          skipped=skipped, nonfinite_streak=streak,
+                          good_streak=good, loss_scale=new_scale), metrics
 
     return train_step

@@ -1,0 +1,376 @@
+"""Fault-injection harness + every fault-tolerance guard, provable:
+skip-step (NaN/Inf grads), dynamic loss scaling, crash-safe atomic
+checkpointing with fallback restore, serving containment/backpressure."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import (CheckpointCorruptError, latest_step,
+                              list_checkpoints, restore_checkpoint,
+                              save_checkpoint)
+from repro.core import faults as F
+from repro.core.config import TrainConfig
+from repro.data import SyntheticLM
+from repro.models import transformer as T
+from repro.serving import Request, SlotServer, generate
+from repro.training import make_train_step
+from repro.training.train_step import init_train_state
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# the harness itself
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_addressing_and_log():
+    plan = F.FaultPlan(sites={"a.b": F.FaultSpec(steps=(2, 5), mode="nan")})
+    assert plan.fires("a.b", 1) is None
+    assert plan.fires("a.b", 2) is not None
+    assert plan.fires("nope", 2) is None
+    assert plan.fired == [("a.b", 2)]
+    always = F.FaultPlan(sites={"x": F.FaultSpec(mode="inf", always=True)})
+    assert always.fires("x", 123) is not None
+
+
+def test_plan_from_specs_cli_parsing():
+    plan = F.plan_from_specs(["train.grads:nan@3,7", "serve.step:stall@*"])
+    assert plan.sites["train.grads"].steps == (3, 7)
+    assert plan.sites["serve.step"].always
+    with pytest.raises(ValueError, match="site:mode@steps"):
+        F.plan_from_specs(["garbage"])
+    with pytest.raises(ValueError, match="mode"):
+        F.plan_from_specs(["a:frobnicate@1"])
+
+
+def test_host_seams_noop_without_plan():
+    F.crash_point("any.site", 0)              # no ambient plan → no-op
+    x = np.ones(4)
+    assert F.inject_array("any.site", x, 0) is not None
+    np.testing.assert_array_equal(F.inject_array("any.site", x, 0), x)
+
+
+def test_inject_array_seeded_and_deterministic():
+    plan = F.FaultPlan(sites={"s": F.FaultSpec(steps=(1,), mode="nan")}, seed=3)
+    with F.active(plan):
+        a = F.inject_array("s", np.ones(16), 1)
+        b = F.inject_array("s", np.ones(16), 1)
+    assert np.isnan(a).sum() == 1
+    np.testing.assert_array_equal(a, b)
+
+
+def test_corrupt_file_modes(tmp_path):
+    p = tmp_path / "f.bin"
+    p.write_bytes(bytes(range(256)))
+    F.corrupt_file(str(p), mode="truncate")
+    assert p.stat().st_size == 128
+    p.write_bytes(bytes(range(256)))
+    F.corrupt_file(str(p), mode="bitflip", seed=1)
+    assert p.read_bytes() != bytes(range(256))
+    assert p.stat().st_size == 256
+    with pytest.raises(ValueError, match="bitflip"):
+        F.corrupt_file(str(p), mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# training: skip-step guard + loss scaling
+# ---------------------------------------------------------------------------
+
+def _tiny_train(tcfg, faults=None, steps=3, mesh=None):
+    cfg = configs.smoke_config("starcoder2-3b").replace(dtype="float32")
+    state = init_train_state(RNG, cfg, tcfg)
+    ds = SyntheticLM(cfg, batch=2, seq_len=16)
+    step = jax.jit(make_train_step(cfg, tcfg, mesh, faults=faults))
+    states, metrics = [state], []
+    for s in range(steps):
+        state, m = step(state, ds.next_batch(s), jax.random.fold_in(RNG, s))
+        states.append(state)
+        metrics.append({k: float(v) for k, v in m.items()})
+    return states, metrics
+
+
+@pytest.mark.parametrize("site", ["train.grads", "train.loss",
+                                  "train.activations"])
+def test_nan_step_skipped_bitwise(site, mesh1):
+    """An injected NaN at any seam skips the update: params AND opt state
+    (moments + Adam count) keep their exact bits, counters advance."""
+    plan = F.FaultPlan(sites={site: F.FaultSpec(steps=(1,), mode="nan")})
+    states, metrics = _tiny_train(TrainConfig(total_steps=3, warmup_steps=1),
+                                  faults=plan, steps=3, mesh=mesh1)
+    before, after = states[1], states[2]          # step 1 is the bad step
+    for a, b in zip(jax.tree.leaves((before.params, before.opt)),
+                    jax.tree.leaves((after.params, after.opt))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert metrics[1]["skipped"] == 1 and metrics[1]["nonfinite_streak"] == 1
+    assert int(after.step) == 2                   # data/step still advance
+    # the NEXT step recovers and actually updates
+    assert metrics[2]["nonfinite_streak"] == 0
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(states[2].params),
+                        jax.tree.leaves(states[3].params)))
+    assert changed
+
+
+def test_clean_run_has_no_skips(mesh1):
+    _, metrics = _tiny_train(TrainConfig(total_steps=3, warmup_steps=1),
+                             steps=3, mesh=mesh1)
+    assert all(m["skipped"] == 0 and m["nonfinite_streak"] == 0
+               for m in metrics)
+
+
+def test_streak_counts_consecutive(mesh1):
+    plan = F.FaultPlan(sites={"train.grads":
+                              F.FaultSpec(steps=(1, 2), mode="inf")})
+    _, metrics = _tiny_train(TrainConfig(total_steps=4, warmup_steps=1),
+                             faults=plan, steps=4, mesh=mesh1)
+    assert [m["nonfinite_streak"] for m in metrics] == [0, 1, 2, 0]
+    assert [m["skipped"] for m in metrics] == [0, 1, 2, 2]
+
+
+def test_dynamic_loss_scale_halves_and_regrows(mesh1):
+    tcfg = TrainConfig(total_steps=6, warmup_steps=1, loss_scale="dynamic",
+                       loss_scale_growth_interval=2)
+    plan = F.FaultPlan(sites={"train.loss": F.FaultSpec(steps=(1,),
+                                                        mode="inf")})
+    states, metrics = _tiny_train(tcfg, faults=plan, steps=4, mesh=mesh1)
+    s0 = 2.0 ** 15
+    assert [m["loss_scale"] for m in metrics] == [s0, s0 / 2, s0 / 2, s0]
+    assert metrics[1]["skipped"] == 1
+    # scaled training still actually trains (finite loss, params move)
+    assert np.isfinite(metrics[-1]["loss"])
+
+
+def test_static_loss_scale_grads_match_unscaled(mesh1):
+    """A static scale changes the backward's dynamic range, not the
+    update direction: one step with scale=1024 lands within float noise
+    of the unscaled step."""
+    t1 = TrainConfig(total_steps=2, warmup_steps=0)
+    t2 = TrainConfig(total_steps=2, warmup_steps=0, loss_scale=1024.0)
+    s1, _ = _tiny_train(t1, steps=1, mesh=mesh1)
+    s2, _ = _tiny_train(t2, steps=1, mesh=mesh1)
+    for a, b in zip(jax.tree.leaves(s1[-1].params),
+                    jax.tree.leaves(s2[-1].params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=1e-5)
+
+
+def test_train_config_validates_fault_knobs():
+    with pytest.raises(ValueError, match="loss_scale"):
+        TrainConfig(loss_scale="bogus")
+    with pytest.raises(ValueError, match="loss_scale"):
+        TrainConfig(loss_scale=-1.0)
+    with pytest.raises(ValueError, match="max_skipped_steps"):
+        TrainConfig(max_skipped_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: atomicity, checksums, fallback, retention
+# ---------------------------------------------------------------------------
+
+def _toy_state(val=1.0):
+    return {"w": jnp.full((4, 3), val, jnp.float32),
+            "opt": {"m": jnp.full((4, 3), val * 0.1, jnp.float32),
+                    "count": jnp.asarray(int(val), jnp.int32)}}
+
+
+@pytest.mark.parametrize("site,expect_step", [
+    ("ckpt.data_tmp_written", 1),       # killed before os.replace
+    ("ckpt.data_replaced", 1),          # .npz in place, no manifest yet
+    ("ckpt.manifest_step_written", 2),  # per-step manifest already durable
+])
+def test_crash_during_save_leaves_restorable_dir(tmp_path, site, expect_step):
+    d = str(tmp_path)
+    save_checkpoint(d, _toy_state(1.0), 1)
+    plan = F.FaultPlan(sites={site: F.FaultSpec(steps=(2,), mode="raise")})
+    with F.active(plan):
+        with pytest.raises(F.FaultInjected):
+            save_checkpoint(d, _toy_state(2.0), 2)
+    state, step = restore_checkpoint(d, _toy_state(0.0))
+    assert step == expect_step
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  np.full((4, 3), float(expect_step)))
+    # a later clean save fully recovers the directory
+    save_checkpoint(d, _toy_state(3.0), 3)
+    _, step = restore_checkpoint(d, _toy_state(0.0))
+    assert step == 3
+
+
+@pytest.mark.parametrize("mode", ["truncate", "bitflip"])
+def test_corrupt_latest_falls_back_to_previous(tmp_path, mode):
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        save_checkpoint(d, _toy_state(float(s)), s)
+    F.corrupt_file(os.path.join(d, "ckpt_00000003.npz"), mode=mode, seed=7)
+    state, step = restore_checkpoint(d, _toy_state(0.0))
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(state["w"]), np.full((4, 3), 2.0))
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(d, _toy_state(0.0), fallback=False)
+
+
+def test_checksum_mismatch_is_corruption(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, _toy_state(1.0), 1)
+    mp = os.path.join(d, "ckpt_00000001.json")
+    with open(mp) as f:
+        manifest = json.load(f)
+    manifest["checksums"]["w"] ^= 0xFF
+    with open(mp, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(CheckpointCorruptError, match="checksum"):
+        restore_checkpoint(d, _toy_state(0.0), fallback=False)
+
+
+def test_restore_names_missing_and_unexpected_keys(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, _toy_state(1.0), 1)
+    bad_tpl = {"w": jnp.zeros((4, 3)), "extra": jnp.zeros(2)}
+    with pytest.raises(ValueError) as ei:
+        restore_checkpoint(d, bad_tpl)
+    msg = str(ei.value)
+    assert "missing" in msg and "extra" in msg
+    assert "unexpected" in msg and "opt/m" in msg
+
+
+def test_all_candidates_corrupt_raises_typed_error(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, _toy_state(1.0), 1)
+    F.corrupt_file(os.path.join(d, "ckpt_00000001.npz"), mode="truncate")
+    with pytest.raises(CheckpointCorruptError, match="no intact checkpoint"):
+        restore_checkpoint(d, _toy_state(0.0))
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "empty"), _toy_state(0.0))
+
+
+def test_retention_keeps_last_k_and_cleans_tmp(tmp_path):
+    d = str(tmp_path)
+    open(os.path.join(d, "ckpt_99999999.npz.tmp"), "w").write("torn")
+    for s in range(1, 6):
+        save_checkpoint(d, _toy_state(float(s)), s, keep=2)
+    steps = [s for s, _ in list_checkpoints(d)]
+    assert steps == [5, 4]
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+    assert latest_step(d) == 5
+    assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_legacy_manifest_only_dir_still_restores(tmp_path):
+    """Pre-format-2 dirs (manifest.json only, no per-step manifests or
+    checksums) remain restorable."""
+    d = str(tmp_path)
+    flat = {"w": np.ones((2, 2), np.float32)}
+    path = os.path.join(d, "ckpt_00000007.npz")
+    np.savez(path, **flat)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"latest": path, "step": 7, "keys": ["w"]}, f)
+    state, step = restore_checkpoint(d, {"w": jnp.zeros((2, 2))})
+    assert step == 7
+
+
+# ---------------------------------------------------------------------------
+# serving: containment, rejection, backpressure, deadlines
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_env(mesh1):
+    cfg = configs.smoke_config("starcoder2-3b").replace(dtype="float32")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    rng = jax.random.PRNGKey(1)
+    prompts = [jax.random.randint(jax.random.fold_in(rng, i), (6,), 0,
+                                  cfg.vocab_size) for i in range(4)]
+    gen = 5
+    refs = [np.asarray(generate(params, cfg, p[None, :], steps=gen,
+                                mesh=mesh1))[0, 6:] for p in prompts]
+    return cfg, params, prompts, refs, gen
+
+
+def test_mixed_workload_drains_and_healthy_slots_unaffected(serve_env, mesh1):
+    """Oversized + out-of-range + poisoned-prefill + poisoned-decode
+    requests: the server drains everything, healthy outputs are bitwise
+    the single-request greedy reference."""
+    cfg, params, prompts, refs, gen = serve_env
+    plan = F.FaultPlan(sites={
+        "serve.prefill_logits": F.FaultSpec(steps=(1,), mode="nan"),
+        "serve.step_logits": F.FaultSpec(steps=(2,), mode="inf"),
+    })
+    srv = SlotServer(cfg, params, slots=2, cache_len=6 + gen + 2, mesh=mesh1,
+                     queue_limit=8)
+    reqs = [Request(uid=i, prompt=p, max_new=gen)
+            for i, p in enumerate(prompts)]
+    reqs.append(Request(uid=10, prompt=jnp.zeros((64,), jnp.int32), max_new=3))
+    reqs.append(Request(uid=11, prompt=jnp.full((4,), cfg.vocab_size, jnp.int32),
+                        max_new=3))
+    with F.active(plan):
+        done = srv.run(reqs)
+    by_uid = {r.uid: r for r in done}
+    assert len(done) == 6 and all(r.done for r in done)
+    assert by_uid[1].status == "failed" and "prefill" in by_uid[1].error
+    assert by_uid[2].status == "failed" \
+        and by_uid[2].error == "non_finite_decode_logits"
+    assert by_uid[10].status == "rejected" \
+        and by_uid[10].error.startswith("prompt_too_long")
+    assert by_uid[11].status == "rejected" \
+        and by_uid[11].error.startswith("token_out_of_range")
+    for uid in (0, 3):
+        assert by_uid[uid].status == "ok"
+        np.testing.assert_array_equal(np.asarray(by_uid[uid].out), refs[uid])
+    assert ("serve.prefill_logits", 1) in plan.fired
+    assert ("serve.step_logits", 2) in plan.fired
+
+
+def test_oversized_prompt_structured_rejection_no_prefill(serve_env, mesh1):
+    cfg, params, prompts, refs, gen = serve_env
+    srv = SlotServer(cfg, params, slots=1, cache_len=8, mesh=mesh1)
+    big = Request(uid=0, prompt=jnp.zeros((8,), jnp.int32), max_new=2)
+    assert srv.submit(big) is True                # consumed, not admitted
+    assert big.status == "rejected" and big.done
+    assert big.error == "prompt_too_long:8>cache_len-1=7"
+    assert not srv.active
+    edge = Request(uid=1, prompt=jnp.zeros((7,), jnp.int32), max_new=2)
+    assert srv.submit(edge) is True and edge.status == "active"
+
+
+def test_queue_backpressure_and_limit_validation(serve_env, mesh1):
+    cfg, params, prompts, _, _ = serve_env
+    srv = SlotServer(cfg, params, slots=1, cache_len=16, mesh=mesh1,
+                     queue_limit=2)
+    rs = [Request(uid=i, prompt=prompts[0], max_new=2) for i in range(3)]
+    assert srv.enqueue(rs[0]) and srv.enqueue(rs[1])
+    assert srv.enqueue(rs[2]) is False
+    assert rs[2].status == "rejected" and rs[2].error == "queue_full"
+    with pytest.raises(ValueError, match="queue_limit"):
+        SlotServer(cfg, params, slots=1, cache_len=16, mesh=mesh1,
+                   queue_limit=0)
+
+
+def test_deadline_evicts_but_server_survives(serve_env, mesh1):
+    cfg, params, prompts, refs, gen = serve_env
+    srv = SlotServer(cfg, params, slots=2, cache_len=32, mesh=mesh1,
+                     default_deadline_steps=2)
+    slow = Request(uid=0, prompt=prompts[0], max_new=25)
+    ok = Request(uid=1, prompt=prompts[1], max_new=gen,
+                 deadline_steps=100)                   # per-request override
+    done = srv.run([slow, ok])
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].status == "evicted" and by_uid[0].error == "deadline"
+    assert by_uid[0].steps_used == 2
+    assert by_uid[1].status == "ok"
+    np.testing.assert_array_equal(np.asarray(by_uid[1].out), refs[1])
+
+
+def test_stall_site_fires_without_breaking_decode(serve_env, mesh1):
+    cfg, params, prompts, refs, gen = serve_env
+    plan = F.FaultPlan(sites={"serve.step": F.FaultSpec(
+        steps=(0,), mode="stall", stall_s=0.01)})
+    srv = SlotServer(cfg, params, slots=1, cache_len=6 + gen + 2, mesh=mesh1)
+    with F.active(plan):
+        done = srv.run([Request(uid=0, prompt=prompts[0], max_new=gen)])
+    assert done[0].status == "ok"
+    np.testing.assert_array_equal(np.asarray(done[0].out), refs[0])
+    assert ("serve.step", 0) in plan.fired

@@ -1,0 +1,121 @@
+"""Kill-and-resume: a crashed run restored from the newest intact
+checkpoint must reproduce the uninterrupted loss trajectory BITWISE
+(synthetic data + rng are keyed by the global step, the lr schedule by
+``state.step``).  Fast path crashes in-process via the fault harness;
+the slow-marked test SIGKILLs a real subprocess mid-checkpoint-save."""
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import faults as F
+from repro.launch import mesh as mesh_lib
+from repro.launch.train import run as train_run
+
+ARCH = "starcoder2-3b"
+KW = dict(batch=2, seq=16, smoke=True, log_every=100)
+METRIC_KEYS = ("loss", "ce", "aux", "grad_norm", "lr")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _assert_bitwise_equal_tail(ref_hist, res_hist, start):
+    """res_hist (resumed, steps start..end) must equal ref_hist[start:]
+    exactly — float equality, no tolerance."""
+    assert [h["step"] for h in res_hist] == [h["step"]
+                                             for h in ref_hist[start:]]
+    for ref, res in zip(ref_hist[start:], res_hist):
+        for k in METRIC_KEYS:
+            assert ref[k] == res[k], (
+                f"step {ref['step']} {k}: {ref[k]!r} != {res[k]!r} — resume "
+                f"is not bitwise-reproducing the uninterrupted run")
+
+
+def test_crash_and_resume_bitwise(tmp_path, mesh1):
+    ckpt = str(tmp_path / "ckpt")
+    # uninterrupted reference trajectory
+    _, ref = train_run(ARCH, steps=8, **KW)
+    # crash (simulated preemption) at the top of step 5; saves at 3 and 6
+    plan = F.FaultPlan(sites={"train.loop": F.FaultSpec(steps=(5,),
+                                                        mode="raise")})
+    with pytest.raises(F.FaultInjected):
+        train_run(ARCH, steps=8, ckpt_dir=ckpt, ckpt_every=3, faults=plan,
+                  **KW)
+    # resume restores step 3 and replays 3..7 bitwise
+    _, resumed = train_run(ARCH, steps=8, ckpt_dir=ckpt, resume=True, **KW)
+    assert resumed[0]["step"] == 3
+    _assert_bitwise_equal_tail(ref, resumed, start=3)
+
+
+def test_resume_without_checkpoint_starts_fresh(tmp_path, mesh1):
+    ckpt = str(tmp_path / "empty")
+    _, hist = train_run(ARCH, steps=2, ckpt_dir=ckpt, resume=True, **KW)
+    assert [h["step"] for h in hist] == [0, 1]
+
+
+def test_ckpt_flags_require_ckpt_dir():
+    with pytest.raises(ValueError, match="ckpt-dir"):
+        train_run(ARCH, steps=2, ckpt_every=1, **KW)
+    with pytest.raises(ValueError, match="ckpt-dir"):
+        train_run(ARCH, steps=2, resume=True, **KW)
+
+
+def test_driver_fails_fast_on_persistent_nonfinite(mesh1):
+    """Every step non-finite → every step skipped → the driver aborts
+    after max_skipped_steps consecutive skips instead of spinning."""
+    plan = F.FaultPlan(sites={"train.grads": F.FaultSpec(mode="nan",
+                                                         always=True)})
+    with pytest.raises(RuntimeError, match="consecutive non-finite"):
+        train_run(ARCH, steps=60, faults=plan, **KW)
+
+
+# -- launch hardening (--mesh parsing) --------------------------------------
+
+def test_parse_mesh_valid():
+    assert mesh_lib.parse_mesh("1x1") == (1, 1)
+    assert mesh_lib.parse_mesh("16x16") == (16, 16)
+    assert mesh_lib.parse_mesh("2x16x16") == (2, 16, 16)
+
+
+@pytest.mark.parametrize("bad", ["16x", "x4", "axb", "0x4", "2x-1", ""])
+def test_parse_mesh_invalid(bad):
+    with pytest.raises(ValueError, match="DxM"):
+        mesh_lib.parse_mesh(bad)
+
+
+# -- real SIGKILL mid-save, via the CLI -------------------------------------
+
+def _train_cli(tmp_path, *extra):
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", ARCH,
+           "--smoke", "--steps", "8", "--batch", "2", "--seq", "16",
+           "--log-every", "100", *extra]
+    return subprocess.run(cmd, cwd=str(tmp_path), env=env,
+                          capture_output=True, text=True, timeout=600)
+
+
+@pytest.mark.slow
+def test_sigkill_during_save_then_resume_bitwise(tmp_path):
+    """End-to-end through the CLI: SIGKILL the process between the
+    checkpoint tmp-file fsync and its os.replace (the worst torn-write
+    window), then --resume and diff --history-out JSON against an
+    uninterrupted run — bitwise."""
+    ckpt = str(tmp_path / "ckpt")
+    ref = _train_cli(tmp_path, "--history-out", "ref.json")
+    assert ref.returncode == 0, ref.stderr
+    # step-6 save is killed mid-write: tmp fsynced, .npz never replaced
+    crashed = _train_cli(tmp_path, "--ckpt-dir", ckpt, "--ckpt-every", "3",
+                         "--inject", "ckpt.data_tmp_written:kill@6")
+    assert crashed.returncode == -signal.SIGKILL
+    resumed = _train_cli(tmp_path, "--ckpt-dir", ckpt, "--resume",
+                         "--history-out", "res.json")
+    assert resumed.returncode == 0, resumed.stderr
+    assert "resumed from step 3" in resumed.stdout
+    with open(tmp_path / "ref.json") as f:
+        ref_hist = json.load(f)["history"]
+    with open(tmp_path / "res.json") as f:
+        res = json.load(f)
+    assert res["resumed"] and res["start"] == 3
+    _assert_bitwise_equal_tail(ref_hist, res["history"], start=3)
