@@ -1,0 +1,108 @@
+"""Decode/serving microbenchmarks (the maxtext decode-microbenchmark
+pattern applied to the MoE serving path).
+
+Entries (suite ``decode``):
+
+* ``decode/prefill/len{L}`` — prefill latency by prompt length under the
+  grouped serving config (prefill tokens/s derived);
+* ``decode/step/{sort,grouped}`` — ONE batched single-token decode step,
+  capacity-padded vs dropless grouped, on the single-device mesh —
+  decode batches are tiny and latency-bound, exactly where capacity
+  padding hurts (``grouped_vs_sort`` ratio on the grouped entry);
+* ``decode/step/ep/{sort,grouped}`` — the same step on the
+  (data=2, model=4) serving mesh: grouped-EP AllToAll × expert-TP
+  against the capacity-padded exchange;
+* ``decode/ar/grouped`` — a {GEN}-step autoregressive loop: AR
+  tokens/sec and per-device GB/s (params + cache traffic per step —
+  the decode roofline quantity).
+
+All steps come from the ``serving/engine.py`` step-builder cache, so
+this suite also exercises the no-retrace serving contract.  CPU note:
+absolute µs are CPU-emulation numbers; the sort-vs-grouped ratios and
+the tokens/s / GB/s derivations are the tracked deliverables
+(``run.py --check`` gates them like every other suite).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro import configs
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import transformer as T
+from repro.serving import engine
+
+BATCH = 8
+GEN = 16
+
+
+def _model(paper: bool):
+    cfg = (configs.get_config if paper
+           else configs.smoke_config)("hetumoe-paper-16e")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _bytes(tree) -> int:
+    return sum(x.nbytes for x in jax.tree.leaves(tree))
+
+
+def run(paper: bool = False):
+    cfg, params = _model(paper)
+    mesh = make_smoke_mesh((1, 1))
+    lens = (128, 256, 512) if paper else (16, 32, 64)
+    cache_len = max(lens) + GEN
+    rng = jax.random.PRNGKey(1)
+    gcfg = engine.serve_config(cfg, dispatch="grouped")
+
+    # -- prefill by prompt length (grouped serving config) ------------------
+    for L in lens:
+        prompt = jax.random.randint(rng, (BATCH, L), 0, cfg.vocab_size)
+        prefill = engine.build_prefill(gcfg, mesh, cache_len=cache_len,
+                                       batch=BATCH)
+        us = timeit(prefill, params, prompt)
+        emit(f"decode/prefill/len{L}", us,
+             f"prefill {BATCH * L / us * 1e6:.0f} tok/s",
+             prefill_tokens_per_s=BATCH * L / us * 1e6)
+
+    # -- one decode step: sort vs grouped -----------------------------------
+    def step_entry(name, scfg, step_mesh, ratio_vs=None):
+        prefill = engine.build_prefill(scfg, step_mesh, cache_len=cache_len,
+                                       batch=BATCH)
+        prompt = jax.random.randint(rng, (BATCH, lens[0]), 0, cfg.vocab_size)
+        logits, caches = prefill(params, prompt)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        step = engine.build_decode(scfg, step_mesh, batch=BATCH)
+        us = timeit(step, params, tok, caches)
+        n_dev = step_mesh.devices.size
+        gbps = (_bytes(params) + _bytes(caches)) / (us * 1e-6) / 1e9 / n_dev
+        ratios = dict(tokens_per_s=BATCH / us * 1e6, gbps_per_device=gbps)
+        if ratio_vs:
+            ratios["grouped_vs_sort"] = ratio_vs / us
+        emit(name, us, f"{BATCH / us * 1e6:.0f} tok/s, "
+             f"{gbps:.2f} GB/s/dev", **ratios)
+        return us, tok, caches, step
+
+    sort_us, *_ = step_entry("decode/step/sort",
+                             engine.serve_config(cfg, dispatch="sort"), mesh)
+    _, tok, caches, gstep = step_entry("decode/step/grouped", gcfg, mesh,
+                                       ratio_vs=sort_us)
+
+    # -- the same step on the (data=2, model=4) serving mesh ----------------
+    mesh_ep = make_smoke_mesh((2, 4))
+    ep_sort_us, *_ = step_entry("decode/step/ep/sort",
+                                engine.serve_config(cfg, dispatch="sort"),
+                                mesh_ep)
+    step_entry("decode/step/ep/grouped", gcfg, mesh_ep, ratio_vs=ep_sort_us)
+
+    # -- autoregressive loop: tokens/sec + per-device GB/s ------------------
+    def ar(params, tok, caches):
+        for i in range(GEN):
+            logits, caches = gstep(params, tok, caches, step_index=i)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        return tok
+
+    us = timeit(ar, params, tok, caches)
+    tps = BATCH * GEN / us * 1e6
+    gbps = GEN * (_bytes(params) + _bytes(caches)) / (us * 1e-6) / 1e9
+    emit("decode/ar/grouped", us, f"AR {tps:.0f} tok/s, {gbps:.2f} GB/s/dev",
+         ar_tokens_per_s=tps, gbps_per_device=gbps)

@@ -1,0 +1,61 @@
+"""Workload-replay serving benchmarks (suite ``traffic``).
+
+Replays seeded traffic scenarios (``repro/serving/traffic.py``) against
+a grouped-dispatch ``SlotServer`` and emits the serving SLO numbers —
+p50 per-token latency as the gated µs, with p99, time-to-first-token
+and slot utilization as recorded ratios:
+
+* ``serve/traffic/poisson`` — Poisson arrivals, mixed prompt/output
+  lengths (steady-state continuous batching);
+* ``serve/traffic/bursty``  — synchronized bursts bigger than the slot
+  pool (queueing + aligned-refill pressure);
+* ``serve/traffic/skewed``  — the bursty workload with every MoE router
+  adversarially biased toward one expert (``skew_router``): the
+  hot-expert regime where capacity padding drops tokens and dropless
+  grouped compute must absorb the whole load on one segment.
+
+The workload (arrival steps, prompt/output lengths, statuses) is
+deterministic per seed; only the wall-clock latencies move with the
+machine, which is exactly what ``run.py --check``'s drift
+normalization expects.
+"""
+import jax
+
+from benchmarks.common import emit
+from repro import configs
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import transformer as T
+from repro.serving import SlotServer
+from repro.serving.traffic import TrafficConfig, replay, skew_router, \
+    synthesize_workload
+
+SLOTS = 4
+CACHE_LEN = 24
+
+
+def run(paper: bool = False):
+    cfg = configs.smoke_config("hetumoe-paper-16e")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    mesh = make_smoke_mesh((1, 1))
+    n = 24 if paper else 12
+    scenarios = (
+        ("poisson", TrafficConfig(num_requests=n, arrival="poisson",
+                                  rate=0.4, seed=7), params),
+        ("bursty", TrafficConfig(num_requests=n, arrival="bursty",
+                                 burst_size=6, burst_every=8, seed=11),
+         params),
+        ("skewed", TrafficConfig(num_requests=n, arrival="bursty",
+                                 burst_size=6, burst_every=8, seed=11),
+         skew_router(params)),
+    )
+    for name, tc, p in scenarios:
+        srv = SlotServer(cfg, p, slots=SLOTS, cache_len=CACHE_LEN, mesh=mesh,
+                         dispatch="grouped", queue_limit=4 * SLOTS)
+        rep = replay(srv, synthesize_workload(tc, cfg))
+        emit(f"serve/traffic/{name}", rep.p50_per_token_s * 1e6,
+             rep.summary(),
+             p99_per_token_us=rep.p99_per_token_s * 1e6,
+             p50_first_token_us=rep.p50_first_token_s * 1e6,
+             slot_utilization=rep.slot_utilization,
+             completed=rep.completed,
+             tokens_out=rep.tokens_out)

@@ -37,7 +37,9 @@ import sys  # noqa: E402
 
 FIGS = {"topk": "3", "layout": "4", "alltoall": "7", "breakdown": "1",
         "overall": "8", "grouped": "4+", "grouped_bwd": "4+ (train step)",
-        "grouped_overlap": "4+ (overlapped pipeline)"}
+        "grouped_overlap": "4+ (overlapped pipeline)",
+        "decode": "4+ (serving decode microbench)",
+        "traffic": "4+ (serving workload replay)"}
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_moe.json"
 
@@ -169,16 +171,20 @@ def main() -> None:
     if args.json:
         global JSON_PATH
         JSON_PATH = pathlib.Path(args.json)
-    from benchmarks import (bench_alltoall, bench_breakdown, bench_grouped,
-                            bench_layout, bench_overall, bench_topk)
+    from benchmarks import (bench_alltoall, bench_breakdown, bench_decode,
+                            bench_grouped, bench_layout, bench_overall,
+                            bench_topk, bench_traffic)
     # suite name → run callable; grouped_bwd is the fwd+bwd training-path
     # suite (bench_grouped.run_bwd) — part of the default list and thus
-    # of the --check regression gate, so perf PRs can't silently skip it
+    # of the --check regression gate, so perf PRs can't silently skip it;
+    # decode/traffic are the serving-side suites (step-builder decode
+    # microbench + SlotServer workload replay)
     mods = {"topk": bench_topk.run, "layout": bench_layout.run,
             "alltoall": bench_alltoall.run, "breakdown": bench_breakdown.run,
             "overall": bench_overall.run, "grouped": bench_grouped.run,
             "grouped_bwd": bench_grouped.run_bwd,
-            "grouped_overlap": bench_grouped.run_overlap}
+            "grouped_overlap": bench_grouped.run_overlap,
+            "decode": bench_decode.run, "traffic": bench_traffic.run}
     wanted = args.only.split(",") if args.only else list(mods)
     unknown = [w for w in wanted if w not in mods]
     if unknown:

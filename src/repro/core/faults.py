@@ -37,6 +37,13 @@ site                                  seam (who calls it, with what index)
 ``serve.step``                        host: before each batched decode step
                                       (decode-step counter) — ``stall``
                                       simulates a step-time stall
+``serve.decode_row``                  host: the batched decode logits as
+                                      returned by the step-builder's
+                                      compiled step
+                                      (``serving/engine.build_decode``,
+                                      decode-step counter) — ``nan``/``inf``
+                                      poisons ONE seeded element, i.e. one
+                                      slot's decode row
 ====================================  =======================================
 
 Two delivery mechanisms:

@@ -362,6 +362,45 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0):
     return jnp.pad(x, widths), n
 
 
+def validate_dispatch_config(cfg: MoEConfig, *, model_size: int,
+                             model_axis: str = "model",
+                             tokens_per_shard: Optional[int] = None) -> None:
+    """Raise ``ValueError`` for cfg × mesh combinations that would
+    otherwise only surface at trace time, deep inside ``shard_map``.
+
+    Called by :func:`sharded_moe_apply` on every trace, and by the
+    serving step-builder (``serving/engine.py``) at STEP-BUILD time so a
+    bad serving configuration fails when the step is constructed — with
+    the config fields named — instead of minutes later inside a decode
+    trace.  With ``tokens_per_shard`` given (the static per-shard token
+    count is known to the caller, e.g. the decode batch), the grouped
+    overlap-pipeline bound divisibility is checked too
+    (:func:`capacity.grouped_overlap_chunk_bound`).
+    """
+    if cfg.overlap_chunks > 1 and cfg.dispatch != "grouped":
+        # the pipeline chunks the bounded expert-sorted buffer, which
+        # only the grouped path builds — silently ignoring the setting
+        # would fake an overlap win on the capacity-padded paths
+        raise ValueError(
+            f"MoEConfig.overlap_chunks={cfg.overlap_chunks} requires "
+            f"dispatch='grouped' (the overlapped pipeline chunks the "
+            f"grouped dispatch buffer), got dispatch="
+            f"{cfg.dispatch!r}")
+    if (cfg.a2a == "hierarchical" and cfg.a2a_inner > 1
+            and model_size > 1 and model_size % cfg.a2a_inner != 0):
+        raise ValueError(
+            f"MoEConfig.a2a='hierarchical' with a2a_inner={cfg.a2a_inner} "
+            f"does not divide the mesh {model_axis!r} axis size "
+            f"{model_size} — pick a2a_inner from its divisors or use "
+            f"a2a='flat'")
+    if (tokens_per_shard is not None and cfg.dispatch == "grouped"
+            and cfg.overlap_chunks > 1):
+        B = (capacity.grouped_segment_bound(cfg, tokens_per_shard, model_size)
+             if model_size > 1
+             else capacity.grouped_tp_gather_bound(cfg, tokens_per_shard))
+        capacity.grouped_overlap_chunk_bound(cfg, B)   # raises when P ∤ B
+
+
 def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
                       params: Dict[str, jax.Array], x: jax.Array, *,
                       num_experts: int, act: str = "swiglu",
@@ -406,23 +445,8 @@ def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
     params = {k: (v.astype(x.dtype) if k != "gate_w" else v)
               for k, v in params.items()}
 
-    if cfg.overlap_chunks > 1 and cfg.dispatch != "grouped":
-        # the pipeline chunks the bounded expert-sorted buffer, which
-        # only the grouped path builds — silently ignoring the setting
-        # would fake an overlap win on the capacity-padded paths
-        raise ValueError(
-            f"MoEConfig.overlap_chunks={cfg.overlap_chunks} requires "
-            f"dispatch='grouped' (the overlapped pipeline chunks the "
-            f"grouped dispatch buffer), got dispatch="
-            f"{cfg.dispatch!r}")
-
-    if (cfg.a2a == "hierarchical" and cfg.a2a_inner > 1
-            and model_size > 1 and model_size % cfg.a2a_inner != 0):
-        raise ValueError(
-            f"MoEConfig.a2a='hierarchical' with a2a_inner={cfg.a2a_inner} "
-            f"does not divide the mesh {model_axis!r} axis size "
-            f"{model_size} — pick a2a_inner from its divisors or use "
-            f"a2a='flat'")
+    validate_dispatch_config(cfg, model_size=model_size,
+                             model_axis=model_axis)
 
     tok_spec = P(axis_names)
     tp = None

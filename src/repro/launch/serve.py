@@ -1,7 +1,14 @@
 """Serving driver: prefill a batch of prompts, decode with batched steps.
 
   PYTHONPATH=src python -m repro.launch.serve --arch dbrx-132b --smoke \\
-      --batch 4 --prompt-len 64 --gen 32
+      --batch 4 --prompt-len 64 --gen 32 --dispatch grouped
+
+``--dispatch {sort,grouped}`` selects the MoE decode dispatch mode
+(validated against ``DISPATCH_MODES`` — a typo fails fast, it never
+silently falls back); ``grouped`` is the supported serving
+configuration for MoE archs (dropless grouped compute on the tiny,
+latency-bound decode batches).  The compiled prefill/decode steps come
+from the ``serving/engine.py`` step-builder cache.
 """
 from __future__ import annotations
 
@@ -15,12 +22,28 @@ from repro import configs
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as T
 from repro.serving import generate
+from repro.serving.engine import serve_config, validate_dispatch
+
+
+def dispatch_cli_arg(name: str):
+    """argparse ``type=`` adapter for :func:`validate_dispatch`
+    (argparse prints ArgumentTypeError messages verbatim; bare
+    ValueError it swallows — same pattern as ``mesh_cli_arg``)."""
+    try:
+        return validate_dispatch(name)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e))
 
 
 def run(arch: str, *, smoke: bool, batch: int, prompt_len: int, gen: int,
-        mesh_shape=(1, 1), temperature: float = 0.0, seed: int = 0):
+        mesh_shape=(1, 1), temperature: float = 0.0, seed: int = 0,
+        dispatch=None):
     cfg = configs.smoke_config(arch) if smoke else configs.get_config(arch)
     assert cfg.has_decode, f"{arch} is encoder-only"
+    cfg = serve_config(cfg, dispatch=dispatch)
+    if cfg.moe is not None:
+        print(f"dispatch={cfg.moe.dispatch} "
+              f"({'flag' if dispatch else 'config default'})")
     mesh = mesh_lib.make_smoke_mesh(tuple(mesh_shape))
     rng = jax.random.PRNGKey(seed)
     params = T.init_model(rng, cfg)
@@ -48,10 +71,14 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mesh", default="1x1", type=mesh_lib.mesh_cli_arg)
+    ap.add_argument("--dispatch", default=None, type=dispatch_cli_arg,
+                    help="MoE decode dispatch mode override "
+                         "(sort|grouped; validated, no silent fallback)")
     args = ap.parse_args()
     run(args.arch, smoke=args.smoke, batch=args.batch,
         prompt_len=args.prompt_len, gen=args.gen,
-        temperature=args.temperature, mesh_shape=args.mesh)
+        temperature=args.temperature, mesh_shape=args.mesh,
+        dispatch=args.dispatch)
 
 
 if __name__ == "__main__":

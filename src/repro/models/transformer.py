@@ -55,6 +55,25 @@ def use_expert_tp() -> bool:
     return os.environ.get("REPRO_EXPERT_TP", "1") == "1"
 
 
+def decode_expert_tp_axis(mesh) -> Optional[str]:
+    """The expert-TP axis the decode path shards the expert f dim over,
+    or None.  One decision point for the MoE decode block AND the
+    serving step-builder (``serving/engine.py``), so both agree on the
+    decode-time collective layout — composes with ``dispatch="grouped"``
+    (the ragged-aware TP gather, PR 4), which is the supported serving
+    configuration for the tiny ragged decode batches."""
+    if not use_expert_tp() or mesh is None:
+        return None
+    if "data" in mesh.axis_names:
+        return "data"
+    import warnings
+    warnings.warn(
+        f"expert TP requested (REPRO_EXPERT_TP) but mesh "
+        f"{mesh.axis_names} has no 'data' axis — decoding "
+        f"without expert tensor parallelism")
+    return None
+
+
 def shard_act(x: jax.Array, mesh, kind: str = "blk") -> jax.Array:
     """Activation sharding hint.  kind: blk (B,S,d) | logits (B,S,V).
 
@@ -181,16 +200,7 @@ def _apply_attn_mlp(bp, shared, x, kind, cfg: ModelConfig, mesh, mode, cache,
     if kind == "moe":
         # expert TP needs a data axis to shard f over; sharded_moe_apply
         # rejects axes missing from the mesh rather than silently no-op'ing
-        tp = None
-        if mode == "decode" and use_expert_tp():
-            if "data" in mesh.axis_names:
-                tp = "data"
-            else:
-                import warnings
-                warnings.warn(
-                    f"expert TP requested (REPRO_EXPERT_TP) but mesh "
-                    f"{mesh.axis_names} has no 'data' axis — decoding "
-                    f"without expert tensor parallelism")
+        tp = decode_expert_tp_axis(mesh) if mode == "decode" else None
         y, aux, _ = moe_lib.sharded_moe_apply(
             mesh, cfg.moe, bp["moe"], h, num_experts=cfg.moe.num_experts,
             act=cfg.act, rng=rng, expert_tp_axis=tp)

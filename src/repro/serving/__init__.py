@@ -1,2 +1,8 @@
-from repro.serving.engine import make_prefill_step, make_serve_step, generate
+from repro.serving.engine import (build_decode, build_prefill,
+                                  build_slot_prefill, clear_step_cache,
+                                  generate, make_prefill_step,
+                                  make_serve_step, serve_config,
+                                  validate_decode_config)
 from repro.serving.scheduler import Request, SlotServer
+from repro.serving.traffic import (TrafficConfig, TrafficReport, replay,
+                                   skew_router, synthesize_workload)

@@ -1,22 +1,156 @@
-"""Serving: prefill + batched single-token decode steps.
+"""Serving: prefill + batched single-token decode steps, built through
+ONE step-builder with a process-wide compiled-step cache.
 
-``serve_step`` is what the decode dry-run shapes lower: ONE new token per
-sequence against a KV/state cache of ``seq_len`` (decode_32k) or the
-bounded ring/recurrent state (long_500k).  ``generate`` is the host-side
-loop used by the examples and integration tests (greedy or temperature
-sampling).
+Step-builder / cache contract
+-----------------------------
+
+Every serving entrypoint (``generate`` here, ``SlotServer`` in
+``serving/scheduler.py``, the ``launch/serve.py`` CLI, the decode
+benchmarks) obtains its compiled steps from the builders below instead
+of calling ``jax.jit`` on fresh closures:
+
+* ``build_prefill(cfg, mesh, cache_len=, batch=, long_context=)`` —
+  jitted ``(params, tokens) -> (last_logits, caches)``;
+* ``build_decode(cfg, mesh, batch=, long_context=)`` — jitted
+  ``(params, token, caches[, step_index=]) -> (logits, caches)``;
+* ``build_slot_prefill(cfg, mesh, cache_len=)`` — jitted
+  ``(params, prompt(1,S), caches, slot) -> (last_logits, caches)`` with
+  ``slot`` static (the ``SlotServer`` per-slot cache scatter).
+
+Each builder returns the SAME callable for the same cache key
+``(kind, cfg, mesh, cache_len, batch, long_context)`` — ``ModelConfig``
+is a frozen (hashable) dataclass, so the key captures the dispatch mode
+and every other knob — which means a second ``generate()`` call with
+identical shapes reuses the already-traced computation instead of
+re-jitting a fresh closure per invocation (the seed behaviour, which
+recompiled every benchmark/test call).  ``trace_counts`` counts actual
+retraces per key; tests probe it to assert cache hits.
+
+* ``serve_config(cfg, dispatch=)`` derives the serving config: the MoE
+  dispatch mode override is validated against ``DISPATCH_MODES`` (a
+  ``ValueError`` naming the valid modes, never a silent fallback) —
+  ``dispatch="grouped"`` is the supported decode configuration: decode
+  batches are tiny, ragged, and latency-bound, exactly where capacity
+  padding hurts most and dropless grouped compute pays off.
+* ``validate_decode_config(cfg, mesh, batch, cache_len=)`` raises at
+  STEP-BUILD time (``ValueError`` naming the config fields) for
+  configurations that would otherwise only fail at trace time deep
+  inside ``shard_map`` — grouped overlap-bound divisibility at the
+  decode token count, hierarchical a2a divisibility
+  (``core/moe.validate_dispatch_config``).
+
+Fault seam (``core/faults.py``): the decode callable applies the
+host-side ``serve.decode_row`` site to its logits (indexed by the
+caller's ``step_index``) — a poisoned grouped decode row, delivered in
+the step-builder path so every consumer (``generate``, ``SlotServer``)
+sees the same containment surface.  With no ambient plan the jitted
+output passes through untouched.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from collections import Counter
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.config import ModelConfig
+from repro.core import faults as faults_mod
+from repro.core import moe as moe_lib
+from repro.core.config import DISPATCH_MODES, ModelConfig
 from repro.models import transformer as T
 
+# process-wide compiled-step cache: key → callable.  Keys are
+# (kind, cfg, mesh, cache_len, batch, long_context); every piece is
+# hashable (ModelConfig/MoEConfig are frozen dataclasses, Mesh hashes by
+# device assignment).  trace_counts[key] increments INSIDE the traced
+# function body, so it counts actual retraces, not calls — the cache-hit
+# tests assert it stays put across repeated generate() calls.
+_STEP_CACHE: Dict[tuple, Callable] = {}
+trace_counts: Counter = Counter()
+
+
+def clear_step_cache() -> None:
+    """Drop every cached compiled step (tests; frees trace caches)."""
+    _STEP_CACHE.clear()
+    trace_counts.clear()
+
+
+def validate_dispatch(dispatch: str) -> str:
+    """Validate a serving dispatch-mode name against ``DISPATCH_MODES``
+    (shared by ``serve_config`` and the ``launch/serve.py`` CLI flag)."""
+    if dispatch not in DISPATCH_MODES:
+        raise ValueError(
+            f"serving dispatch={dispatch!r} is not a known dispatch "
+            f"mode; valid options: {DISPATCH_MODES}")
+    return dispatch
+
+
+def serve_config(cfg: ModelConfig, *, dispatch: Optional[str] = None
+                 ) -> ModelConfig:
+    """The config actually served: ``dispatch`` (when given) overrides
+    the MoE dispatch mode — validated, never silently dropped."""
+    if dispatch is None:
+        return cfg
+    validate_dispatch(dispatch)
+    if cfg.moe is None:
+        raise ValueError(
+            f"dispatch={dispatch!r} requested but {cfg.name} has no MoE "
+            f"layer (cfg.moe is None) — the dispatch mode only applies "
+            f"to MoE architectures")
+    if cfg.moe.dispatch == dispatch:
+        return cfg
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch=dispatch))
+
+
+def _tokens_per_shard(mesh, batch: int) -> int:
+    """Static per-shard token count of a decode step: ``batch`` single
+    tokens, padded to the device count (``sharded_moe_apply`` pads the
+    flattened token axis to the mesh size)."""
+    n_dev = 1 if mesh is None else mesh.devices.size
+    return (batch + (-batch) % n_dev) // n_dev
+
+
+def validate_decode_config(cfg: ModelConfig, mesh, batch: int, *,
+                           cache_len: Optional[int] = None) -> None:
+    """Step-BUILD-time validation of a decode configuration.
+
+    The decode token count is static (``batch`` × 1), so everything the
+    grouped path would assert during tracing can be checked here: the
+    dispatch/a2a/overlap combination and the overlap-chunk bound
+    divisibility at this batch's per-shard token count.  Raises
+    ``ValueError`` naming the offending config fields.
+    """
+    if not cfg.has_decode:
+        raise ValueError(f"{cfg.name} is encoder-only — no decode step")
+    if batch < 1:
+        raise ValueError(f"decode batch must be >= 1, got {batch}")
+    if cache_len is not None and cache_len < 2:
+        raise ValueError(
+            f"cache_len must be >= 2 (one prompt token + one generated), "
+            f"got {cache_len}")
+    if cfg.moe is None:
+        return
+    model_size = 1 if mesh is None else int(mesh.shape.get("model", 1))
+    moe_lib.validate_dispatch_config(
+        cfg.moe, model_size=model_size,
+        tokens_per_shard=_tokens_per_shard(mesh, batch))
+
+
+def _cached(key: tuple, make: Callable[[], Callable]) -> Callable:
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        fn = make()
+        _STEP_CACHE[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# raw (uncached, unjitted) step factories — kept for the examples/tests
+# that drive the functions eagerly; the builders below wrap these.
+# ---------------------------------------------------------------------------
 
 def make_prefill_step(cfg: ModelConfig, mesh=None, *, cache_len: int,
                       long_context: bool = False):
@@ -39,17 +173,109 @@ def make_serve_step(cfg: ModelConfig, mesh=None, *, long_context: bool = False):
     return serve_step
 
 
+# ---------------------------------------------------------------------------
+# cached step builders
+# ---------------------------------------------------------------------------
+
+def build_prefill(cfg: ModelConfig, mesh=None, *, cache_len: int,
+                  batch: Optional[int] = None, long_context: bool = False):
+    """Cached jitted prefill ``(params, tokens(B,S)) -> (logits, caches)``."""
+    key = ("prefill", cfg, mesh, cache_len, batch, long_context)
+
+    def make():
+        raw = make_prefill_step(cfg, mesh, cache_len=cache_len,
+                                long_context=long_context)
+
+        def prefill(params, tokens):
+            trace_counts[key] += 1
+            return raw(params, tokens)
+        return jax.jit(prefill)
+    return _cached(key, make)
+
+
+def build_decode(cfg: ModelConfig, mesh=None, *, batch: Optional[int] = None,
+                 long_context: bool = False):
+    """Cached jitted decode step.  Returns a callable
+    ``(params, token(B,1), caches, step_index=0) -> (logits, caches)``;
+    ``step_index`` feeds the host-side ``serve.decode_row`` fault site
+    (one seeded logit element poisoned when the ambient plan fires —
+    containment is the scheduler's job, delivery is the builder's)."""
+    key = ("decode", cfg, mesh, None, batch, long_context)
+
+    def make():
+        raw = make_serve_step(cfg, mesh, long_context=long_context)
+
+        def step_traced(params, token, caches):
+            trace_counts[key] += 1
+            return raw(params, token, caches)
+        jitted = jax.jit(step_traced)
+
+        def step(params, token, caches, step_index: int = 0):
+            logits, new_caches = jitted(params, token, caches)
+            if faults_mod.get_active() is not None:
+                poisoned = faults_mod.inject_array(
+                    "serve.decode_row", logits, index=step_index)
+                logits = jnp.asarray(poisoned, dtype=logits.dtype)
+            return logits, new_caches
+        return step
+    return _cached(key, make)
+
+
+def build_slot_prefill(cfg: ModelConfig, mesh=None, *, cache_len: int,
+                       long_context: bool = False):
+    """Cached jitted per-slot prefill for ``SlotServer``: run the full
+    forward on a ``(1, S)`` prompt against a fresh single-row cache,
+    then scatter that cache into row ``slot`` of the batched cache tree
+    (``slot`` is static, so each slot index traces once per prompt
+    length).  ``(params, prompt, caches, slot) -> (last_logits, caches)``.
+    """
+    key = ("slot_prefill", cfg, mesh, cache_len, None, long_context)
+
+    def make():
+        def slot_prefill(params, prompt, caches, slot):
+            trace_counts[key] += 1
+            sub = T.init_caches(cfg, 1, cache_len, long_context=long_context,
+                                dtype=jnp.dtype(cfg.dtype))
+            h, _, sub = T.forward(params, prompt, cfg, mesh=mesh,
+                                  caches=sub, collect_caches=True,
+                                  long_context=long_context)
+            logits = T.logits_from_hidden(params, cfg, h[:, -1:], mesh)
+
+            def put(full, one):
+                if one.ndim >= 2 and one.shape[1] == 1:   # (NSB, 1, ...) batch
+                    return lax.dynamic_update_slice(
+                        full, one.astype(full.dtype),
+                        (0, slot) + (0,) * (full.ndim - 2))
+                return one.astype(full.dtype)             # scalars (pos)
+
+            return logits[0, -1], jax.tree.map(put, caches, sub)
+        return jax.jit(slot_prefill, static_argnums=(3,))
+    return _cached(key, make)
+
+
+# ---------------------------------------------------------------------------
+# host-side generation loop
+# ---------------------------------------------------------------------------
+
 def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
              mesh=None, cache_len: Optional[int] = None,
              temperature: float = 0.0, rng: Optional[jax.Array] = None,
-             long_context: bool = False) -> jax.Array:
-    """Greedy/temperature generation.  prompt (B, S) → (B, S+steps)."""
+             long_context: bool = False,
+             dispatch: Optional[str] = None) -> jax.Array:
+    """Greedy/temperature generation.  prompt (B, S) → (B, S+steps).
+
+    ``dispatch`` overrides the MoE dispatch mode for serving (validated
+    against ``DISPATCH_MODES``).  Steps come from the compiled-step
+    cache: repeated calls with identical shapes never retrace.
+    """
     assert cfg.has_decode, f"{cfg.name} is encoder-only"
+    cfg = serve_config(cfg, dispatch=dispatch)
     B, S = prompt.shape[:2]
     cache_len = cache_len or (S + steps)
-    prefill = jax.jit(make_prefill_step(cfg, mesh, cache_len=cache_len,
-                                        long_context=long_context))
-    step = jax.jit(make_serve_step(cfg, mesh, long_context=long_context))
+    validate_decode_config(cfg, mesh, B, cache_len=cache_len)
+    prefill = build_prefill(cfg, mesh, cache_len=cache_len, batch=B,
+                            long_context=long_context)
+    step = build_decode(cfg, mesh, batch=B, long_context=long_context)
     logits, caches = prefill(params, prompt)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     out = [prompt]
@@ -62,5 +288,5 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
         out.append(tok)
         if i + 1 < steps:
-            logits, caches = step(params, tok, caches)
+            logits, caches = step(params, tok, caches, step_index=i)
     return jnp.concatenate(out, axis=1)

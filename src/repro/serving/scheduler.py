@@ -40,11 +40,25 @@ on alignment: a queued request is prefilled only when no slot is active
 (the reset is a no-op).  The queue is scanned first-fit, so an aligned
 request behind a misaligned head still gets its slot.
 
+Compiled steps come from the ``serving/engine.py`` step-builder cache
+(``build_decode`` / ``build_slot_prefill``) — the scheduler never calls
+``jax.jit`` itself, so two servers over the same ``(cfg, cache_len,
+slots)`` share one compiled step, and the decode dispatch mode is a
+first-class constructor argument (``dispatch="grouped"`` routes the
+tiny, ragged decode batches through dropless grouped compute — the
+supported serving configuration; the override is validated against
+``DISPATCH_MODES``, never silently rewritten).  Grouped-path bounds are
+validated at server CONSTRUCTION time (``engine.validate_decode_config``),
+not at first-trace time.
+
 Fault-injection seams (``core/faults.py``): ``serve.prefill`` /
 ``serve.prefill_logits`` (indexed by request uid), ``serve.step_logits``
 (uid), ``serve.step`` (decode-step counter; ``stall`` mode simulates a
 slow step without wall-clock flakiness — deadlines count steps, not
-seconds).
+seconds), and ``serve.decode_row`` (decode-step counter) — delivered
+inside the step-builder path (``engine.build_decode``), poisoning one
+seeded element of the batched decode logits: the grouped-decode-row
+containment case, proving one poisoned row fails only its own slot.
 
 CPU-scale but structurally the production pattern (vLLM-style slots
 without paging — the ring/linear caches are contiguous per slot).
@@ -57,13 +71,12 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import faults as faults_mod
 from repro.core.config import ModelConfig
 from repro.models import transformer as T
-from repro.serving.engine import make_serve_step
+from repro.serving import engine
 
 # terminal request statuses (Request.done=True implies one of these)
 TERMINAL_STATUSES = ("ok", "rejected", "failed", "evicted")
@@ -88,12 +101,17 @@ class SlotServer:
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
                  cache_len: int, mesh=None, eos_id: Optional[int] = None,
                  queue_limit: Optional[int] = None,
-                 default_deadline_steps: Optional[int] = None):
+                 default_deadline_steps: Optional[int] = None,
+                 dispatch: Optional[str] = None):
         assert cfg.has_decode and cfg.frontend is None
         if queue_limit is not None and queue_limit < 1:
             raise ValueError(
                 f"SlotServer queue_limit must be >= 1 or None (unbounded), "
                 f"got {queue_limit}")
+        cfg = engine.serve_config(cfg, dispatch=dispatch)
+        # fail HERE, at server construction, not at the first decode
+        # trace: grouped bounds / overlap divisibility / a2a divisibility
+        engine.validate_decode_config(cfg, mesh, slots, cache_len=cache_len)
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.slots = slots
         self.cache_len = cache_len
@@ -107,27 +125,11 @@ class SlotServer:
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
         self._decode_steps = 0
         self._pos = 0            # host mirror of the caches' shared pos scalar
-        self._step = jax.jit(make_serve_step(cfg, mesh))
-        # per-slot prefill: full-batch forward on a (1, S) prompt, then
-        # scatter its caches into slot i of the batched cache tree
-        self._prefill = jax.jit(self._prefill_impl, static_argnums=(2,))
-
-    def _prefill_impl(self, prompt, caches, slot):
-        sub = T.init_caches(self.cfg, 1, self.cache_len,
-                            dtype=jnp.dtype(self.cfg.dtype))
-        h, _, sub = T.forward(self.params, prompt, self.cfg, mesh=self.mesh,
-                              caches=sub, collect_caches=True)
-        logits = T.logits_from_hidden(self.params, self.cfg, h[:, -1:],
-                                      self.mesh)
-
-        def put(full, one):
-            if one.ndim >= 2 and one.shape[1] == 1:     # (NSB, 1, ...) batch
-                return jax.lax.dynamic_update_slice(
-                    full, one.astype(full.dtype),
-                    (0, slot) + (0,) * (full.ndim - 2))
-            return one.astype(full.dtype)               # scalars (pos)
-
-        return logits[0, -1], jax.tree.map(put, caches, sub)
+        # compiled steps from the shared builder cache — two servers over
+        # the same (cfg, mesh, cache_len, slots) reuse one traced step
+        self._step = engine.build_decode(cfg, mesh, batch=slots)
+        self._prefill = engine.build_slot_prefill(cfg, mesh,
+                                                  cache_len=cache_len)
 
     # -- validation / admission ---------------------------------------------
     def _validate(self, req: Request) -> Optional[str]:
@@ -178,7 +180,8 @@ class SlotServer:
         the slot is now occupied."""
         try:
             faults_mod.crash_point("serve.prefill", index=req.uid)
-            logits, new_caches = self._prefill(req.prompt[None, :],
+            logits, new_caches = self._prefill(self.params,
+                                               req.prompt[None, :],
                                                self.caches, slot)
             lg = faults_mod.inject_array("serve.prefill_logits", logits,
                                          index=req.uid)
@@ -242,9 +245,10 @@ class SlotServer:
         if not self.active:
             return []
         faults_mod.maybe_stall("serve.step", index=self._decode_steps)
+        logits, self.caches = self._step(self.params, self.tokens, self.caches,
+                                         step_index=self._decode_steps)
         self._decode_steps += 1
         self._pos += 1
-        logits, self.caches = self._step(self.params, self.tokens, self.caches)
         lg = np.asarray(logits[:, -1].astype(jnp.float32))
         finished = []
         next_tokens = np.asarray(self.tokens).copy()

@@ -25,8 +25,8 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 INJECT_ENTRY = "a2a/model/gpu-16x8"        # deterministic cost-model entry
 
 
-def _run(tmp_json, *extra):
-    cmd = [sys.executable, "-m", "benchmarks.run", "--only", "alltoall",
+def _run(tmp_json, *extra, suite="alltoall"):
+    cmd = [sys.executable, "-m", "benchmarks.run", "--only", suite,
            "--json", str(tmp_json), *extra]
     env = {**os.environ, "PYTHONPATH": "src",
            "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
@@ -69,3 +69,33 @@ def test_check_gate_exit_codes(tmp_path):
     assert "REGRESSION" in r.stdout and INJECT_ENTRY in r.stdout
     # the harness remeasured once (best-of-2) before failing
     assert "remeasuring" in r.stdout
+
+
+def test_unknown_suite_is_an_error(tmp_path):
+    """--only with a typo'd suite name fails fast (argparse error naming
+    the available suites) instead of silently benchmarking nothing."""
+    r = _run(tmp_path / "bench.json", suite="decod")
+    assert r.returncode == 2, r.stdout + r.stderr
+    assert "unknown suite" in r.stderr and "decode" in r.stderr
+
+
+@pytest.mark.slow
+def test_decode_suite_registered_and_survives_check(tmp_path):
+    """The serving decode suite is a first-class citizen of the perf
+    gate: a plain run commits `decode/*` entries (tagged with the suite
+    name, sort-vs-grouped ratio recorded), and a --check rerun against
+    that baseline passes."""
+    tmp_json = tmp_path / "bench.json"
+    r = _run(tmp_json, suite="decode")
+    assert r.returncode == 0, r.stdout + r.stderr
+    entries = json.loads(tmp_json.read_text())["entries"]
+    for name in ("decode/step/sort", "decode/step/grouped",
+                 "decode/ar/grouped"):
+        assert name in entries, sorted(entries)
+        assert entries[name]["suite"] == "decode"
+    assert entries["decode/step/grouped"]["grouped_vs_sort"] > 0
+    assert entries["decode/ar/grouped"]["ar_tokens_per_s"] > 0
+
+    r = _run(tmp_json, "--check", "--check-factor", "1.6", suite="decode")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "--check ok" in r.stdout

@@ -364,6 +364,43 @@ def test_deadline_evicts_but_server_survives(serve_env, mesh1):
     np.testing.assert_array_equal(np.asarray(by_uid[1].out), refs[1])
 
 
+def test_decode_row_poison_contained_under_grouped_dispatch(mesh1):
+    """A poisoned grouped decode row (the ``serve.decode_row`` site,
+    delivered inside the step-builder's compiled-step path) fails ONLY
+    the slot whose row it lands in: the other in-flight slot and the
+    refilled request finish bitwise equal to the grouped generate()
+    reference."""
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    gen = 5
+    prompts = [jax.random.randint(jax.random.fold_in(RNG, i), (6,), 0,
+                                  cfg.vocab_size) for i in range(3)]
+    refs = [np.asarray(generate(params, cfg, p[None, :], steps=gen,
+                                mesh=mesh1, dispatch="grouped"))[0, 6:]
+            for p in prompts]
+    plan = F.FaultPlan(sites={
+        "serve.decode_row": F.FaultSpec(steps=(1,), mode="nan")})
+    srv = SlotServer(cfg, params, slots=2, cache_len=6 + gen + 2, mesh=mesh1,
+                     dispatch="grouped", queue_limit=8)
+    reqs = [Request(uid=i, prompt=p, max_new=gen)
+            for i, p in enumerate(prompts)]
+    with F.active(plan):
+        done = srv.run(reqs)
+    assert ("serve.decode_row", 1) in plan.fired
+    by_uid = {r.uid: r for r in done}
+    assert len(done) == 3 and all(r.done for r in done)
+    # exactly ONE request (the slot the seeded NaN landed in) failed;
+    # which one is a function of the plan seed, not of scheduling
+    failed = [r for r in done if r.status == "failed"]
+    assert len(failed) == 1
+    assert failed[0].error == "non_finite_decode_logits"
+    for r in done:
+        if r.status == "ok":
+            np.testing.assert_array_equal(np.asarray(r.out), refs[r.uid],
+                                          err_msg=f"uid={r.uid}")
+    assert sum(r.status == "ok" for r in done) == 2
+
+
 def test_stall_site_fires_without_breaking_decode(serve_env, mesh1):
     cfg, params, prompts, refs, gen = serve_env
     plan = F.FaultPlan(sites={"serve.step": F.FaultSpec(

@@ -133,6 +133,24 @@ def test_routing_equivalence_matrix(i, gate, mesh1, mesh_ep4):
 
 
 # ---------------------------------------------------------------------------
+# decode-shaped draws: S=1 and tiny ragged batches (the serving step).
+# The serving path now runs dispatch="grouped" for decode, so routing
+# equivalence must hold at exactly these shapes — a single token per
+# step and small ragged batches far below the expert count.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S", [1, 2, 3, 5])
+@pytest.mark.parametrize("mesh_name", ["mesh1", "mesh_ep4"])
+def test_routing_equivalence_decode_shapes(S, mesh_name, request):
+    mesh = request.getfixturevalue(mesh_name)
+    rs = np.random.RandomState(7000 + S)
+    gate = GATE_STRATEGIES[int(rs.randint(len(GATE_STRATEGIES)))]
+    E = int(rs.choice([8, 16]))
+    _run_case(mesh, gate, E, _gate_kwargs(rs, gate, E), S, "float32",
+              ["flat", "hierarchical"][int(rs.randint(2))], seed=900 + S)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis sweep (slow; skips when hypothesis is not installed)
 # ---------------------------------------------------------------------------
 

@@ -1,12 +1,19 @@
-"""Serving path: prefill+decode consistency with the full forward pass."""
+"""Serving path: prefill+decode consistency with the full forward pass,
+the step-builder compiled-step cache (no re-jitting across calls), and
+grouped-dispatch decode equivalence (generate ≡ SlotServer, grouped ≡
+sort ≡ dense)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import configs
+from repro.core import capacity
+from repro.core.config import DISPATCH_MODES
 from repro.models import transformer as T
-from repro.serving import generate
+from repro.serving import Request, SlotServer, engine, generate
 from repro.serving.engine import make_prefill_step, make_serve_step
 
 RNG = jax.random.PRNGKey(9)
@@ -49,3 +56,150 @@ def test_generate_rejects_encoder_only(mesh1):
     p = T.init_model(RNG, cfg)
     with pytest.raises(AssertionError):
         generate(p, cfg, jnp.zeros((1, 4), jnp.int32), steps=2, mesh=mesh1)
+
+
+# ---------------------------------------------------------------------------
+# step-builder cache: repeated generate() calls must NOT re-jit
+# ---------------------------------------------------------------------------
+
+def test_generate_reuses_compiled_steps(mesh1):
+    """The seed behaviour jitted fresh closures per generate() call; the
+    step-builder cache must trace prefill and decode exactly once for
+    identical shapes, and a second call must not add retraces."""
+    cfg = configs.smoke_config("starcoder2-3b").replace(dtype="float32")
+    p = T.init_model(RNG, cfg)
+    prompt = jax.random.randint(RNG, (2, 8), 0, cfg.vocab_size)
+    engine.clear_step_cache()
+    a = generate(p, cfg, prompt, steps=5, mesh=mesh1)
+    counts_after_first = dict(engine.trace_counts)
+    assert counts_after_first, "trace probe recorded nothing"
+    assert all(v == 1 for v in counts_after_first.values()), counts_after_first
+    b = generate(p, cfg, prompt, steps=5, mesh=mesh1)
+    assert dict(engine.trace_counts) == counts_after_first, \
+        "second identical generate() retraced"
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_distinct_shapes_get_distinct_cached_steps(mesh1):
+    cfg = configs.smoke_config("starcoder2-3b").replace(dtype="float32")
+    engine.clear_step_cache()
+    s1 = engine.build_decode(cfg, mesh1, batch=2)
+    s2 = engine.build_decode(cfg, mesh1, batch=2)
+    s3 = engine.build_decode(cfg, mesh1, batch=4)
+    assert s1 is s2 and s1 is not s3
+
+
+# ---------------------------------------------------------------------------
+# grouped decode: generate ≡ sort ≡ dense, SlotServer ≡ generate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh_name", ["mesh1", "mesh_ep4"])
+def test_generate_grouped_matches_sort_and_dense(mesh_name, request):
+    """Decode-shaped routing equivalence end to end: the same prompt
+    generates the same token sequence under every dispatch mode."""
+    mesh = request.getfixturevalue(mesh_name)
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    p = T.init_model(RNG, cfg)
+    prompt = jax.random.randint(RNG, (2, 6), 0, cfg.vocab_size)
+    outs = {d: np.asarray(generate(p, cfg, prompt, steps=5, mesh=mesh,
+                                   dispatch=d))
+            for d in DISPATCH_MODES}
+    for d in DISPATCH_MODES:
+        np.testing.assert_array_equal(outs[d], outs["dense"],
+                                      err_msg=f"dispatch={d} vs dense")
+
+
+def test_slot_server_grouped_bitwise_matches_generate(mesh1):
+    """SlotServer under dispatch='grouped' emits per-token outputs
+    bitwise identical to batch-1 generate() under grouped on every
+    healthy slot (the PR's acceptance bar)."""
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    p = T.init_model(RNG, cfg)
+    gen = 4
+    prompts = [jax.random.randint(jax.random.fold_in(RNG, i), (6,), 0,
+                                  cfg.vocab_size) for i in range(3)]
+    refs = [np.asarray(generate(p, cfg, pr[None, :], steps=gen, mesh=mesh1,
+                                dispatch="grouped"))[0, 6:] for pr in prompts]
+    srv = SlotServer(cfg, p, slots=2, cache_len=6 + gen + 2, mesh=mesh1,
+                     dispatch="grouped")
+    assert srv.cfg.moe.dispatch == "grouped"
+    done = srv.run([Request(uid=i, prompt=pr, max_new=gen)
+                    for i, pr in enumerate(prompts)])
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    for r in done:
+        assert r.status == "ok", (r.uid, r.status, r.error)
+        np.testing.assert_array_equal(np.asarray(r.out), refs[r.uid],
+                                      err_msg=f"uid={r.uid}")
+
+
+# ---------------------------------------------------------------------------
+# build-time validation: dispatch names + grouped bounds
+# ---------------------------------------------------------------------------
+
+def test_dispatch_override_validated():
+    cfg = configs.smoke_config("dbrx-132b")
+    with pytest.raises(ValueError) as ei:
+        engine.serve_config(cfg, dispatch="banana")
+    assert all(m in str(ei.value) for m in DISPATCH_MODES)
+    # no override → config untouched; matching override → same config
+    assert engine.serve_config(cfg) is cfg
+    assert engine.serve_config(cfg, dispatch=cfg.moe.dispatch) is cfg
+    got = engine.serve_config(cfg, dispatch="grouped")
+    assert got.moe.dispatch == "grouped"
+
+
+def test_dispatch_override_rejected_for_dense_arch(mesh1):
+    cfg = configs.smoke_config("starcoder2-3b")
+    p = T.init_model(RNG, cfg)
+    with pytest.raises(ValueError, match="no MoE"):
+        generate(p, cfg, jnp.zeros((1, 4), jnp.int32), steps=2, mesh=mesh1,
+                 dispatch="grouped")
+
+
+def test_grouped_overlap_bound_fails_at_build_time(mesh1):
+    """A decode batch whose grouped segment bound is not divisible by
+    overlap_chunks must raise at step-BUILD/server-construction time
+    (ValueError), not as a trace-time assertion inside shard_map."""
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    B = capacity.grouped_tp_gather_bound(cfg.moe, 1)   # batch=1 decode
+    bad = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, dispatch="grouped", overlap_chunks=B + 1))
+    with pytest.raises(ValueError, match="overlap"):
+        engine.validate_decode_config(bad, mesh1, 1)
+    p = T.init_model(RNG, cfg)
+    with pytest.raises(ValueError, match="overlap"):
+        SlotServer(bad, p, slots=1, cache_len=8, mesh=mesh1)
+    with pytest.raises(ValueError, match="overlap"):
+        generate(p, bad, jnp.zeros((1, 4), jnp.int32), steps=2, mesh=mesh1)
+
+
+def test_validate_decode_config_rejects_bad_shapes(mesh1):
+    cfg = configs.smoke_config("dbrx-132b")
+    with pytest.raises(ValueError, match="batch"):
+        engine.validate_decode_config(cfg, mesh1, 0)
+    with pytest.raises(ValueError, match="cache_len"):
+        engine.validate_decode_config(cfg, mesh1, 1, cache_len=1)
+
+
+# ---------------------------------------------------------------------------
+# launch/serve.py CLI: --dispatch flag
+# ---------------------------------------------------------------------------
+
+def test_serve_cli_dispatch_arg_validated():
+    import argparse
+
+    from repro.launch.serve import dispatch_cli_arg
+    assert dispatch_cli_arg("grouped") == "grouped"
+    assert dispatch_cli_arg("sort") == "sort"
+    with pytest.raises(argparse.ArgumentTypeError) as ei:
+        dispatch_cli_arg("groupd")
+    assert all(m in str(ei.value) for m in DISPATCH_MODES)
+
+
+def test_serve_driver_logs_dispatch_mode(capsys):
+    from repro.launch.serve import run
+    out = run("dbrx-132b", smoke=True, batch=2, prompt_len=4, gen=2,
+              dispatch="grouped")
+    assert out.shape == (2, 6)
+    printed = capsys.readouterr().out
+    assert "dispatch=grouped (flag)" in printed

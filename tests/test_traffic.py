@@ -1,0 +1,149 @@
+"""Workload-replay harness: seeded determinism, replay accounting, and
+router skew — the traffic layer feeding ``benchmarks/bench_traffic.py``."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serving import Request, SlotServer
+from repro.serving.traffic import (TrafficConfig, replay, skew_router,
+                                   synthesize_workload)
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# workload synthesis
+# ---------------------------------------------------------------------------
+
+def _workload_sig(wl):
+    return [(at, int(r.uid), np.asarray(r.prompt).tolist(), r.max_new)
+            for at, r in wl]
+
+
+@pytest.mark.parametrize("arrival", ["poisson", "bursty"])
+def test_workload_deterministic_per_seed(arrival):
+    cfg = configs.smoke_config("dbrx-132b")
+    tc = TrafficConfig(num_requests=10, arrival=arrival, seed=5)
+    a = synthesize_workload(tc, cfg)
+    b = synthesize_workload(tc, cfg)
+    assert _workload_sig(a) == _workload_sig(b)
+    c = synthesize_workload(TrafficConfig(num_requests=10, arrival=arrival,
+                                          seed=6), cfg)
+    assert _workload_sig(a) != _workload_sig(c)
+    assert len(a) == 10
+    assert all(at <= bt for (at, _), (bt, _) in zip(a, a[1:]))
+    for _, r in a:
+        assert r.prompt.shape[-1] in tc.prompt_lens
+        assert r.max_new in tc.max_new_choices
+        toks = np.asarray(r.prompt)
+        assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+
+
+def test_bursty_arrivals_come_in_bursts():
+    cfg = configs.smoke_config("dbrx-132b")
+    wl = synthesize_workload(
+        TrafficConfig(num_requests=10, arrival="bursty", burst_size=4,
+                      burst_every=8), cfg)
+    arrivals = [at for at, _ in wl]
+    assert arrivals == [0] * 4 + [8] * 4 + [16] * 2
+
+
+def test_traffic_config_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        TrafficConfig(arrival="uniform")
+    with pytest.raises(ValueError, match="num_requests"):
+        TrafficConfig(num_requests=0)
+
+
+# ---------------------------------------------------------------------------
+# router skew
+# ---------------------------------------------------------------------------
+
+def test_skew_router_biases_one_expert_and_copies():
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    params = T.init_model(RNG, cfg)
+    before = jax.tree.map(np.asarray, params)
+    skewed = skew_router(params, bias=16.0, expert=1)
+    # original untouched
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(
+            jax.tree.map(np.asarray, params))):
+        np.testing.assert_array_equal(a, b)
+    changed = 0
+    for blk_old, blk_new in zip(params["blocks"], skewed["blocks"]):
+        if not (isinstance(blk_old, dict) and "moe" in blk_old):
+            continue
+        gw_old = np.asarray(blk_old["moe"]["gate_w"])
+        gw_new = np.asarray(blk_new["moe"]["gate_w"])
+        np.testing.assert_allclose(gw_new[..., 1], gw_old[..., 1] + 16.0,
+                                   rtol=1e-6)
+        mask = np.ones(gw_old.shape[-1], bool)
+        mask[1] = False
+        np.testing.assert_array_equal(gw_new[..., mask], gw_old[..., mask])
+        # bias is decisive at init scale: the skewed column wins argmax
+        assert (gw_new.argmax(-1) == 1).all()
+        changed += 1
+    assert changed > 0, "no MoE router found to skew"
+
+
+# ---------------------------------------------------------------------------
+# replay
+# ---------------------------------------------------------------------------
+
+def _replay_env():
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    params = T.init_model(RNG, cfg)
+    return cfg, params
+
+
+def test_replay_drains_everything_and_reports(mesh1):
+    cfg, params = _replay_env()
+    tc = TrafficConfig(num_requests=6, arrival="poisson", rate=0.7, seed=3)
+    srv = SlotServer(cfg, params, slots=2, cache_len=20, mesh=mesh1,
+                     dispatch="grouped", queue_limit=8)
+    rep = replay(srv, synthesize_workload(tc, cfg))
+    assert len(rep.statuses) == 6
+    assert (rep.completed + rep.rejected + rep.failed
+            + rep.evicted) == 6
+    assert rep.completed > 0 and rep.tokens_out > 0
+    assert rep.decode_steps > 0 and not srv.active and not srv.queue
+    assert 0.0 < rep.slot_utilization <= 1.0
+    assert rep.p99_per_token_s >= rep.p50_per_token_s > 0.0
+    assert rep.p99_first_token_s >= rep.p50_first_token_s > 0.0
+    s = rep.summary()
+    assert "completed=6" in s and "util=" in s
+
+
+def test_replay_workload_shape_is_machine_independent(mesh1):
+    """Statuses, token counts and decode-step count are functions of the
+    seed alone — two replays of the same workload agree exactly (only
+    the wall-clock latencies may differ)."""
+    cfg, params = _replay_env()
+    tc = TrafficConfig(num_requests=5, arrival="bursty", burst_size=3,
+                       burst_every=4, seed=9)
+    outs = []
+    for _ in range(2):
+        srv = SlotServer(cfg, params, slots=2, cache_len=20, mesh=mesh1,
+                         dispatch="grouped")
+        rep = replay(srv, synthesize_workload(tc, cfg))
+        outs.append((rep.statuses, rep.tokens_out, rep.decode_steps,
+                     rep.slot_utilization))
+    assert outs[0] == outs[1]
+
+
+def test_replay_counts_rejections(mesh1):
+    """An inadmissible request (prompt longer than the cache) shows up as
+    a rejection in the report, not a hang or a crash."""
+    cfg, params = _replay_env()
+    srv = SlotServer(cfg, params, slots=1, cache_len=8, mesh=mesh1,
+                     dispatch="grouped")
+    wl = [(0, Request(uid=0, prompt=jnp.zeros((4,), jnp.int32), max_new=2)),
+          (0, Request(uid=1, prompt=jnp.zeros((32,), jnp.int32), max_new=2))]
+    rep = replay(srv, wl)
+    assert rep.rejected == 1 and rep.completed == 1
+    assert rep.statuses == {0: "ok", 1: "rejected"}
+    assert not math.isnan(rep.p50_per_token_s)
