@@ -1,0 +1,74 @@
+"""HLO-side graph for the lint rules.
+
+Jaxpr lint catches what we *traced*; this catches what the compiler
+*emitted* — the two can disagree (XLA may fold, fuse, or re-schedule
+collectives after the fact).  ``HloGraph`` reuses the module parser and
+the call-graph/loop-multiplier walk from ``launch/hlo_analysis.py`` (one
+parser for the roofline AND the linter) and exposes compiled ops with
+the same structural context the jaxpr walker gives: which computation
+each op lives in, its while-trip multiplier, and whether it executes
+inside a loop body.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional
+
+from repro.launch import hlo_analysis as H
+
+
+class HloOpSite(NamedTuple):
+    op: H.Op                 # parsed op (kind, result bytes/dims, raw line)
+    computation: str         # enclosing computation name
+    multiplier: float        # while-trip multiplier (1.0 at top level)
+    in_loop: bool            # reached through a while body/cond edge
+
+    def describe(self) -> str:
+        return f"{self.computation}/{self.op.kind}"
+
+
+class HloGraph:
+    """Parsed compiled-module text + lint context (see ``JaxprGraph``
+    for the context keys).  ``graph.kind == "hlo"`` selects the HLO
+    variants of the registered rules."""
+    kind = "hlo"
+
+    def __init__(self, text: str, context: Optional[Dict[str, Any]] = None,
+                 entry: Optional[str] = None):
+        self.text = text
+        self.context: Dict[str, Any] = dict(context or {})
+        self.comps, self.shapes = H.parse_module(text)
+        if not self.comps:
+            raise ValueError(
+                "HloGraph: no computations parsed — pass compiled module "
+                "text (jit(f).lower(...).compile().as_text())")
+        self.entry = entry or H.find_entry(text, self.comps)
+        self.mult, self.fused, self.in_loop = H.call_graph(self.comps,
+                                                           self.entry)
+
+    def sites(self) -> List[HloOpSite]:
+        out = []
+        for comp, ops in self.comps.items():
+            m = self.mult.get(comp)
+            if m is None:            # unreachable / dead computation
+                continue
+            looped = self.in_loop.get(comp, False)
+            for op in ops:
+                out.append(HloOpSite(op, comp, m, looped))
+        return out
+
+    def find(self, kind: str) -> List[HloOpSite]:
+        """Ops of one HLO kind; ``-start`` async halves fold into their
+        base kind (``all-to-all-start`` → ``all-to-all``)."""
+        return [s for s in self.sites()
+                if s.op.kind.replace("-start", "") == kind]
+
+    def count(self, kind: str) -> int:
+        return len(self.find(kind))
+
+    def collectives(self) -> List[HloOpSite]:
+        return [s for s in self.sites()
+                if s.op.kind.replace("-start", "") in H.COLLECTIVE_KINDS]
+
+    @property
+    def label(self) -> str:
+        return str(self.context.get("label", "<hlo>"))

@@ -1,0 +1,360 @@
+"""Config-matrix lint CLI.
+
+  PYTHONPATH=src python -m repro.analysis.lint                 # full matrix
+  PYTHONPATH=src python -m repro.analysis.lint --config NAME   # one cell
+  PYTHONPATH=src python -m repro.analysis.lint --json out.json
+  PYTHONPATH=src python -m repro.analysis.lint --list
+
+Traces the standard dispatch config matrix — sort/grouped × {1-rank,
+EP4, TP2, EP2×TP2} × flat/hier × overlap P ∈ {1, 2, 4} — through
+``sharded_moe_apply`` on the 8-fake-CPU-device backend, runs every
+registered jaxpr rule over the forward graphs and (grouped cells, the
+Pallas kernel path) the gradient graphs, lints one representative cell's
+COMPILED HLO, and runs the probe rules (donation aliasing on a real
+``init_train_state``, serving retrace budget on repeated ``generate()``
+calls).  Cell names look like ``grouped/ep4/hier/P2`` and
+``decode/ep4/grouped/P1`` (serving step-BUILD validation cells).
+
+A config×mesh combination the validators reject (``--config`` with a
+bad overlap bound, an indivisible hierarchical inner) produces a
+``config-invalid`` FINDING, not a traceback — the lint report is the
+interface, exit code 1 means error-level findings exist.
+
+Report: ``LINT_moe.json`` at the repo root (or ``--json PATH``) with
+``{schema, rules, matrix, findings[{rule, level, location, message,
+config}], summary}`` — diffable by subprocess tests the same way
+``tests/test_bench_gate.py`` diffs ``BENCH_moe.json``.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import sys  # noqa: E402
+from typing import Dict, List, Optional, Tuple  # noqa: E402
+
+JSON_PATH = pathlib.Path(__file__).resolve().parents[3] / "LINT_moe.json"
+SCHEMA = "lint_moe/v1"
+
+# one token block shaped (4, 16, D): 64 tokens, sharded over every mesh
+# axis by sharded_moe_apply — per-shard counts below derive from this
+TOKENS = (4, 16)
+D_MODEL = 32
+D_FF = 64
+E = 8
+
+# mesh key → (shape, axis names, expert-TP axis)
+MESHES: Dict[str, Tuple[Tuple[int, ...], Tuple[str, ...], Optional[str]]] = {
+    "r1":     ((1, 1), ("data", "model"), None),
+    "ep4":    ((4,),   ("model",),        None),
+    "tp2":    ((2, 1), ("data", "model"), "data"),
+    "ep2tp2": ((2, 2), ("data", "model"), "data"),
+}
+A2A = {"flat": ("flat", 1), "hier": ("hierarchical", 2)}
+
+# the representative cell whose COMPILED module gets the HLO-side pass
+HLO_CELL = "grouped/ep4/flat/P2"
+
+
+def _mesh(key: str):
+    from repro.launch.mesh import make_smoke_mesh
+    shape, axes, tp = MESHES[key]
+    return make_smoke_mesh(shape, axes), tp
+
+
+def _model_size(key: str) -> int:
+    shape, axes, _ = MESHES[key]
+    return dict(zip(axes, shape)).get("model", 1)
+
+
+def _tokens_per_shard(key: str) -> int:
+    shape, _, _ = MESHES[key]
+    n_dev = 1
+    for s in shape:
+        n_dev *= s
+    total = TOKENS[0] * TOKENS[1]
+    return (total + (-total) % n_dev) // n_dev
+
+
+def matrix_cells() -> List[str]:
+    """The standard config matrix, as cell names."""
+    cells = []
+    for mesh_key in MESHES:
+        a2as = ("flat", "hier") if _model_size(mesh_key) > 1 else ("flat",)
+        for a2a in a2as:
+            cells.append(f"sort/{mesh_key}/{a2a}/P1")
+            for P in (1, 2, 4):
+                cells.append(f"grouped/{mesh_key}/{a2a}/P{P}")
+    # serving step-BUILD validation cells (engine.validate_decode_config)
+    cells += ["decode/r1/grouped/P1", "decode/ep4/grouped/P1"]
+    return cells
+
+
+def parse_cell(name: str) -> Dict:
+    """``dispatch/mesh/a2a/P<n>`` or ``decode/mesh/dispatch/P<n>`` →
+    spec dict.  Unknown vocabulary raises ValueError naming the options;
+    a VALID name with an invalid config combination (P that does not
+    divide the bound) parses fine and surfaces as a config-invalid
+    finding from the validators instead."""
+    from repro.core.config import DISPATCH_MODES
+
+    parts = name.split("/")
+    err = (f"bad lint cell {name!r}: expected dispatch/mesh/a2a/P<n> "
+           f"(dispatch in {DISPATCH_MODES}, mesh in {tuple(MESHES)}, a2a "
+           f"in {tuple(A2A)}) or decode/mesh/dispatch/P<n>")
+    if len(parts) != 4:
+        raise ValueError(err)
+    if parts[0] == "decode":
+        _, mesh_key, dispatch, p = parts
+        a2a = "flat"
+    else:
+        dispatch, mesh_key, a2a, p = parts
+    if (dispatch not in DISPATCH_MODES or mesh_key not in MESHES
+            or a2a not in A2A or not p.startswith("P")):
+        raise ValueError(err)
+    try:
+        P = int(p[1:])
+    except ValueError:
+        raise ValueError(err)
+    return {"name": name, "decode": parts[0] == "decode",
+            "dispatch": dispatch, "mesh": mesh_key, "a2a": a2a, "P": P}
+
+
+def _cell_cfg(spec: Dict, *, use_pallas: bool = False):
+    from repro.core.config import MoEConfig
+    a2a, inner = A2A[spec["a2a"]]
+    return MoEConfig(num_experts=E, dispatch=spec["dispatch"], gate="topk",
+                     top_k=2, capacity_factor=8.0, a2a=a2a, a2a_inner=inner,
+                     overlap_chunks=spec["P"], use_pallas_gate=use_pallas)
+
+
+def lint_cell(name: str, rules=None) -> List:
+    """Lint one matrix cell.  Traces the forward (and, grouped cells,
+    the Pallas-path gradient) graph and runs the registered jaxpr rules;
+    validator rejections become ``config-invalid`` findings."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import analysis
+    from repro.core import moe
+
+    spec = parse_cell(name)
+    if spec["decode"]:
+        return _lint_decode_cell(spec)
+    mesh, tp = _mesh(spec["mesh"])
+    model_size = _model_size(spec["mesh"])
+    T = _tokens_per_shard(spec["mesh"])
+    cfg = _cell_cfg(spec)
+    try:
+        moe.validate_dispatch_config(cfg, model_size=model_size,
+                                     tokens_per_shard=T)
+    except ValueError as e:
+        return analysis.lint_probe(config_error=str(e), label=name)
+
+    params = moe.init_moe_params(jax.random.PRNGKey(0), cfg, D_MODEL, D_FF,
+                                 E, act="swiglu", dtype=jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (*TOKENS, D_MODEL),
+                          jnp.bfloat16)
+    ctx = {"cfg": cfg, "model_size": model_size, "tokens_per_shard": T,
+           "d_model": D_MODEL, "label": name, "direction": "fwd"}
+
+    def fwd(p, v):
+        return moe.sharded_moe_apply(mesh, cfg, p, v, num_experts=E,
+                                     act="swiglu", expert_tp_axis=tp)
+
+    findings = analysis.lint_jaxpr(
+        analysis.trace_graph(fwd, params, x, context=ctx), rules=rules)
+
+    if spec["dispatch"] == "grouped":
+        # gradient graph through the production (Pallas) kernel path:
+        # the no-recompute-backward invariant lives here
+        gcfg = _cell_cfg(spec, use_pallas=True)
+
+        def loss(p, v):
+            y, aux, _ = moe.sharded_moe_apply(
+                mesh, gcfg, p, v, num_experts=E, act="swiglu",
+                expert_tp_axis=tp)
+            return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+
+        gctx = dict(ctx, cfg=gcfg, direction="grad", label=name + ":grad")
+        findings += analysis.lint_jaxpr(
+            analysis.trace_graph(jax.grad(loss), params, x, context=gctx),
+            rules=rules)
+    return findings
+
+
+def _lint_decode_cell(spec: Dict) -> List:
+    """Serving step-BUILD validation: route the cell's dispatch/overlap
+    through ``engine.validate_decode_config`` (which folds in
+    ``moe.validate_dispatch_config`` at the decode batch's static token
+    count) — rejections become findings, clean cells return none."""
+    from repro import analysis, configs
+    from repro.serving import engine
+
+    mesh, _ = _mesh(spec["mesh"])
+    base = configs.smoke_config("dbrx-132b")
+    cfg = base.replace(moe=dataclasses.replace(
+        base.moe, dispatch="grouped", overlap_chunks=spec["P"]))
+    try:
+        cfg = engine.serve_config(cfg, dispatch=spec["dispatch"])
+        engine.validate_decode_config(cfg, mesh, batch=4, cache_len=32)
+    except ValueError as e:
+        return analysis.lint_probe(config_error=str(e), label=spec["name"])
+    return []
+
+
+def lint_hlo_cell(name: str = HLO_CELL, rules=None) -> List:
+    """Compile one cell and lint the emitted module — the jaxpr pass
+    checks what we traced, this checks what XLA actually scheduled."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import analysis
+    from repro.core import moe
+
+    spec = parse_cell(name)
+    mesh, tp = _mesh(spec["mesh"])
+    cfg = _cell_cfg(spec)
+    params = moe.init_moe_params(jax.random.PRNGKey(0), cfg, D_MODEL, D_FF,
+                                 E, act="swiglu", dtype=jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (*TOKENS, D_MODEL),
+                          jnp.bfloat16)
+    compiled = jax.jit(lambda p, v: moe.sharded_moe_apply(
+        mesh, cfg, p, v, num_experts=E, act="swiglu",
+        expert_tp_axis=tp)).lower(params, x).compile()
+    text = compiled.as_text()
+    return analysis.lint_hlo(text, context={"label": name + ":hlo"},
+                             rules=rules)
+
+
+def lint_probes() -> List:
+    """Runtime-evidence probes: donation aliasing on a real
+    ``init_train_state`` tree, and the serving retrace budget across
+    repeated ``generate()`` calls (the PR 7 no-re-jit contract)."""
+    import jax
+
+    from repro import analysis, configs
+    from repro.core.config import TrainConfig
+    from repro.serving import engine, generate
+    from repro.training.train_step import init_train_state
+
+    findings = []
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+    findings += analysis.lint_probe(donated=state, label="probe/donation")
+
+    mesh, _ = _mesh("r1")
+    params = state.params
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    engine.clear_step_cache()
+    for _ in range(2):   # identical shapes: every key must trace once
+        generate(params, cfg, prompt, steps=3, mesh=mesh,
+                 dispatch="grouped")
+    findings += analysis.lint_probe(trace_counts=dict(engine.trace_counts),
+                                    label="probe/retrace")
+    return findings
+
+
+def write_report(path: pathlib.Path, cells: List[str], findings: List,
+                 rules_run: List[str]) -> Dict:
+    from repro.analysis.rules import REGISTRY
+    summary = {"error": 0, "warn": 0, "info": 0}
+    for f in findings:
+        summary[f.level] = summary.get(f.level, 0) + 1
+    report = {
+        "schema": SCHEMA,
+        "rules": {n: {"level": REGISTRY[n].level,
+                      "doc": (REGISTRY[n].doc or "").strip()
+                      .split("\n")[0].strip()}
+                  for n in sorted(rules_run)},
+        "matrix": cells,
+        "findings": [f.as_dict() for f in findings],
+        "summary": dict(summary, cells=len(cells)),
+    }
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="graph-invariant lint over the MoE dispatch config "
+                    "matrix; exit 1 on error-level findings")
+    ap.add_argument("--config", default=None, metavar="NAME",
+                    help="lint ONE cell (e.g. grouped/ep4/hier/P2 or "
+                         "decode/ep4/grouped/P5); default: full matrix")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help=f"report path (default {JSON_PATH.name} at the "
+                         f"repo root)")
+    ap.add_argument("--rules", default=None,
+                    help="comma list restricting which rules run")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip the compiled-HLO pass")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the runtime probes (donation, retrace)")
+    ap.add_argument("--list", action="store_true",
+                    help="print matrix cells and registered rules")
+    args = ap.parse_args(argv)
+
+    import repro.analysis as analysis  # registers the rules
+
+    rules = args.rules.split(",") if args.rules else None
+    if rules:
+        try:
+            analysis.rules_for("jaxpr", rules)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.list:
+        for c in matrix_cells():
+            print(c)
+        for name, rule in sorted(analysis.REGISTRY.items()):
+            print(f"rule {name} [{rule.level}] kinds={','.join(rule.kinds)}")
+        return 0
+
+    if args.config:
+        try:
+            cells = [parse_cell(args.config)["name"]]
+        except ValueError as e:
+            ap.error(str(e))
+    else:
+        cells = matrix_cells()
+
+    findings = []
+    for cell in cells:
+        cell_findings = lint_cell(cell, rules=rules)
+        findings += cell_findings
+        status = ("clean" if not cell_findings
+                  else f"{len(cell_findings)} finding(s)")
+        print(f"# {cell}: {status}")
+        for f in cell_findings:
+            print(f"#   [{f.level}] {f.rule} @ {f.location}: {f.message}")
+        sys.stdout.flush()
+
+    if not args.config:
+        if not args.no_hlo:
+            hlo_findings = lint_hlo_cell(rules=rules)
+            print(f"# {HLO_CELL}:hlo: "
+                  f"{'clean' if not hlo_findings else len(hlo_findings)}")
+            findings += hlo_findings
+        if not args.no_probes:
+            probe_findings = lint_probes()
+            print(f"# probes: "
+                  f"{'clean' if not probe_findings else len(probe_findings)}")
+            findings += probe_findings
+
+    rules_run = (rules if rules is not None else sorted(analysis.REGISTRY))
+    report = write_report(pathlib.Path(args.json) if args.json else JSON_PATH,
+                          cells, findings, rules_run)
+    n_err = report["summary"]["error"]
+    print(f"# lint: {len(cells)} cells, {len(findings)} finding(s), "
+          f"{n_err} error(s) -> "
+          f"{pathlib.Path(args.json) if args.json else JSON_PATH}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,354 @@
+"""The rule registry and the shipped graph-invariant rules.
+
+Every rule encodes a hazard this repo has ALREADY hit (the PR number is
+the regression it guards), expressed over the structured walkers in
+``analysis.graph`` / ``analysis.hlo`` instead of jaxpr substring greps:
+
+  collective-in-loop      PR 5: ``lax.scan`` folded the P pipelined
+                          exchanges into ONE loop-body collective,
+                          hiding the overlap from XLA's scheduler.
+  overlap-chunk-count     PR 5: the pipeline must emit exactly 3P flat /
+                          5P hierarchical all-to-alls with (M, B/P, d)
+                          payload windows for ``overlap_chunks = P``.
+  no-recompute-backward   PR 3: the grouped backward must run the Pallas
+                          dlhs/drhs kernels off the residuals — a
+                          ``ragged_dot`` in a grad graph is the VJP
+                          re-running the whole forward.
+  dtype-leak              PR 4: ``ragged_dot``'s transpose leaked f32
+                          cotangents into bf16 dots (f32 compute, 2×
+                          bytes) — mixed float operand dtypes on a
+                          dot-like equation mean a missing cast.
+  donation-alias          PR 6: donated ``TrainState`` leaves sharing a
+                          buffer make XLA donation reject the alias.
+  retrace-budget          PR 7: each serving step-builder key traces
+                          once; more means a compiled-step cache leak.
+  config-invalid          a config × mesh cell the validators reject
+                          (``moe.validate_dispatch_config`` /
+                          ``engine.validate_decode_config``) — the lint
+                          CLI reports the rejection as a finding instead
+                          of dying on a traceback.
+
+New-graph-invariant convention (ROADMAP process note): a new rule ships
+with a KNOWN-BAD case in ``tests/test_analysis.py`` that makes it fire,
+plus the clean config matrix proving it stays quiet on healthy graphs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis.graph import EqnSite, JaxprGraph, ProbeGraph
+
+LEVELS = ("error", "warn", "info")
+
+# jaxpr primitive names that move data across mesh ranks (the psum-like
+# reductions included: any of these inside a loop body serializes the
+# pipeline the same way)
+COLLECTIVE_PRIMITIVES = frozenset({
+    "all_to_all", "all_gather", "all_gather_invariant", "psum",
+    "psum_invariant", "psum_scatter", "reduce_scatter", "ppermute",
+    "pgather", "pmax", "pmin",
+})
+
+# dot-like primitives whose operand dtypes must agree (group_sizes /
+# index operands are integral and exempt)
+DOT_PRIMITIVES = frozenset({"dot_general", "ragged_dot"})
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint hit.  ``location`` is a structural path
+    (``shard_map/scan/all_to_all``) or a probe key; ``config`` is the
+    matrix cell / graph label it was found under."""
+    rule: str
+    level: str
+    location: str
+    message: str
+    config: str = ""
+
+    def as_dict(self) -> Dict[str, str]:
+        return {"rule": self.rule, "level": self.level,
+                "location": self.location, "message": self.message,
+                "config": self.config}
+
+
+@dataclass(frozen=True)
+class Rule:
+    name: str
+    level: str
+    kinds: Tuple[str, ...]                  # graph kinds it applies to
+    check: Callable[[Any], List[Finding]]   # Graph -> findings
+    doc: str = ""
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(name: str, level: str, kinds: Tuple[str, ...]):
+    """Decorator: register ``check(graph) -> [Finding]`` under ``name``.
+
+    The wrapped checker may return ``Finding`` dicts without ``rule`` /
+    ``level`` filled; they are stamped here so a rule cannot misreport
+    its own identity.
+    """
+    if level not in LEVELS:
+        raise ValueError(f"rule {name!r}: level must be one of {LEVELS}, "
+                         f"got {level!r}")
+
+    def wrap(fn: Callable) -> Callable:
+        def check(graph) -> List[Finding]:
+            out = []
+            for f in fn(graph):
+                if isinstance(f, Finding):
+                    out.append(Finding(name, level, f.location, f.message,
+                                       f.config or graph.label))
+                else:  # (location, message) shorthand
+                    loc, msg = f
+                    out.append(Finding(name, level, loc, msg, graph.label))
+            return out
+        REGISTRY[name] = Rule(name, level, kinds, check, doc=fn.__doc__ or "")
+        return fn
+    return wrap
+
+
+def rules_for(kind: str, names: Optional[Iterable[str]] = None) -> List[Rule]:
+    wanted = set(names) if names is not None else None
+    unknown = (wanted or set()) - set(REGISTRY)
+    if unknown:
+        raise ValueError(f"unknown lint rule(s) {sorted(unknown)}; "
+                         f"registered: {sorted(REGISTRY)}")
+    return [r for r in REGISTRY.values()
+            if kind in r.kinds and (wanted is None or r.name in wanted)]
+
+
+def run_rule(name: str, graph) -> List[Finding]:
+    """Run ONE registered rule against a graph (the test-suite entry
+    point for porting the old substring witnesses)."""
+    if name not in REGISTRY:
+        raise ValueError(f"unknown lint rule {name!r}; "
+                         f"registered: {sorted(REGISTRY)}")
+    return REGISTRY[name].check(graph)
+
+
+def lint_graph(graph, rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    out: List[Finding] = []
+    for rule in rules_for(graph.kind, rules):
+        out.extend(rule.check(graph))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shipped rules — jaxpr side
+# ---------------------------------------------------------------------------
+
+@register("collective-in-loop", "error", ("jaxpr", "hlo"))
+def _collective_in_loop(graph) -> List:
+    """A cross-rank collective inside a ``scan``/``while`` BODY.  XLA
+    schedules one loop iteration at a time, so a collective folded into
+    a loop body cannot overlap the next iteration's compute — exactly
+    how the PR 5 pipeline silently lost its overlap when written as a
+    ``fori_loop``.  The dispatch graphs this linter traces unroll every
+    pipelined exchange statically; a per-layer scan over super-blocks is
+    a different (whole-model) graph and is not linted by the matrix.
+    """
+    if graph.context.get("allow_loop_collectives"):
+        return []
+    out = []
+    if graph.kind == "hlo":
+        for site in graph.collectives():
+            if site.in_loop:
+                out.append((f"{site.computation}/{site.op.kind}",
+                            f"HLO collective {site.op.kind!r} executes "
+                            f"inside a while body "
+                            f"(×{site.multiplier:.0f} trip multiplier) — "
+                            f"it re-issues every iteration and cannot "
+                            f"overlap the pipeline"))
+        return out
+    for site in graph.sites():
+        if site.primitive in COLLECTIVE_PRIMITIVES and site.loop_depth > 0:
+            out.append((site.describe(),
+                        f"collective {site.primitive!r} traced inside a "
+                        f"loop body (depth {site.loop_depth}, "
+                        f"trip×{site.trip}) — a statically-unrolled "
+                        f"pipeline must keep its exchanges out of "
+                        f"scan/while bodies"))
+    return out
+
+
+def _payload_sites(graph: JaxprGraph, model_size: int, chunk_rows: int,
+                   d_model: int) -> List[EqnSite]:
+    """The all_to_all sites that move an (…, chunk_rows, d_model) token
+    window across ``model_size`` ranks — hierarchical stages reshape the
+    leading rank axis (M,) → (inner, outer), so match on the trailing
+    window shape plus the leading-axis product."""
+    out = []
+    for site in graph.find("all_to_all"):
+        shapes = site.out_shapes
+        if not shapes:
+            continue
+        s = shapes[0]
+        if (len(s) >= 3 and s[-1] == d_model and s[-2] == chunk_rows
+                and int(np.prod(s[:-2])) == model_size):
+            out.append(site)
+    return out
+
+
+@register("overlap-chunk-count", "error", ("jaxpr",))
+def _overlap_chunk_count(graph: JaxprGraph) -> List:
+    """The grouped dispatch path with ``overlap_chunks = P`` must emit
+    exactly ``moe.expected_grouped_a2a_eqns(cfg, model_size)`` separate
+    ``all_to_all`` equations — P × (1 counts + stages dispatch + stages
+    combine) — and the payload exchanges must move (M, B/P, d) windows,
+    not the full bound.  Fewer equations means the pipeline collapsed
+    (scan-folded or short-circuited); full-bound payloads mean the
+    windows never actually split.  Applies to forward graphs traced with
+    ``cfg``/``model_size``/``tokens_per_shard``/``d_model`` context.
+    """
+    from repro.core import capacity
+    from repro.core import moe as moe_lib
+
+    ctx = graph.context
+    cfg = ctx.get("cfg")
+    model_size = int(ctx.get("model_size", 1))
+    if (cfg is None or cfg.dispatch != "grouped" or model_size <= 1
+            or ctx.get("direction", "fwd") != "fwd"):
+        return []
+    expected = moe_lib.expected_grouped_a2a_eqns(cfg, model_size)
+    got = graph.count("all_to_all")
+    out = []
+    if got != expected:
+        out.append(("all_to_all",
+                    f"grouped dispatch with overlap_chunks="
+                    f"{cfg.overlap_chunks}, a2a={cfg.a2a!r} must emit "
+                    f"{expected} all_to_all equations, traced {got} — "
+                    f"the overlap pipeline folded or short-circuited"))
+    T = ctx.get("tokens_per_shard")
+    d = ctx.get("d_model")
+    if T is None or d is None:
+        return out
+    B = (capacity.grouped_segment_bound(cfg, int(T), model_size))
+    P = cfg.overlap_chunks
+    if B % P:
+        return out            # bound validation owns this failure mode
+    stages = 2 if moe_lib.expected_grouped_a2a_eqns(cfg, model_size) \
+        == P * 5 else 1
+    payload = _payload_sites(graph, model_size, B // P, int(d))
+    want_payload = 2 * stages * P
+    if len(payload) != want_payload:
+        out.append(("all_to_all",
+                    f"expected {want_payload} payload all_to_all "
+                    f"equations moving ({model_size}, {B // P}, {d}) "
+                    f"windows (bound B={B}, P={P}), found "
+                    f"{len(payload)} — the microchunk windows did not "
+                    f"split the bound"))
+    return out
+
+
+@register("no-recompute-backward", "error", ("jaxpr",))
+def _no_recompute_backward(graph: JaxprGraph) -> List:
+    """A ``ragged_dot`` equation in a grouped-path GRADIENT graph.  The
+    custom_vjp backward (PR 3) computes dlhs/drhs straight off the
+    residuals with the Pallas kernels; ``ragged_dot`` appearing in a
+    grad graph means ``jax.vjp(ragged_dot)`` re-ran the whole forward
+    (2× the FLOPs, plus the f32-cotangent leak its transpose causes).
+    Applies when the graph was traced with ``expect_no_ragged`` set, or
+    with ``direction="grad"`` under a Pallas-kernel grouped config.
+    """
+    ctx = graph.context
+    cfg = ctx.get("cfg")
+    applies = bool(ctx.get("expect_no_ragged")) or (
+        ctx.get("direction") == "grad" and cfg is not None
+        and cfg.dispatch == "grouped" and cfg.use_pallas_gate)
+    if not applies:
+        return []
+    return [(site.describe(),
+             "ragged_dot in a backward graph — the grouped VJP must run "
+             "the Pallas dlhs/drhs kernels off the residuals, not "
+             "re-derive the forward through jax.vjp(ragged_dot)")
+            for site in graph.find("ragged_dot")]
+
+
+@register("dtype-leak", "error", ("jaxpr",))
+def _dtype_leak(graph: JaxprGraph) -> List:
+    """Mixed float operand dtypes on a dot-like equation.  ``lax``
+    accepts an f32 operand against a bf16 one without complaint (that is
+    how PR 4's f32 cotangents slipped into bf16 training graphs via
+    ``ragged_dot``'s transpose); the result silently computes and stores
+    in f32 — 2× the bytes on exactly the tensors the bf16 config was
+    meant to shrink.  Accumulating in f32 is fine (and intended): this
+    rule only fires when the *inputs* disagree, i.e. a cast is missing.
+    """
+    import jax.numpy as jnp
+
+    out = []
+    for site in graph.sites():
+        if site.primitive not in DOT_PRIMITIVES:
+            continue
+        float_dts = {str(dt) for dt in site.in_dtypes
+                     if jnp.issubdtype(dt, jnp.floating)}
+        if len(float_dts) > 1:
+            out.append((site.describe(),
+                        f"{site.primitive} mixes float operand dtypes "
+                        f"{sorted(float_dts)} — insert an explicit cast "
+                        f"(f32 accumulation belongs in "
+                        f"preferred_element_type / an output cast, not "
+                        f"in a widened operand)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shipped rules — probe side (runtime evidence, no graph)
+# ---------------------------------------------------------------------------
+
+@register("donation-alias", "error", ("probe",))
+def _donation_alias(graph: ProbeGraph) -> List:
+    """Two leaves of a donated pytree share one buffer (see
+    ``training.train_step.donation_alias_pairs``, the single source of
+    the aliasing check).  Context: ``donated`` = the pytree the driver
+    donates (e.g. a ``TrainState``)."""
+    from repro.training.train_step import donation_alias_pairs
+
+    donated = graph.context.get("donated")
+    if donated is None:
+        return []
+    return [(f"{a} ~ {b}",
+             f"donated leaves {a} and {b} alias the same buffer — XLA "
+             f"donation rejects the alias (or silently un-donates, "
+             f"doubling state HBM); build distinct buffers")
+            for a, b in donation_alias_pairs(donated)]
+
+
+@register("retrace-budget", "error", ("probe",))
+def _retrace_budget(graph: ProbeGraph) -> List:
+    """A serving step-builder cache key traced more than ``budget``
+    times (default 1).  Context: ``trace_counts`` (the
+    ``serving.engine.trace_counts`` Counter, or any mapping key→count)
+    and optional ``budget``.  More than one trace per key is the seed's
+    re-jit-per-call bug resurfacing through an unhashable cache key."""
+    from repro.serving.engine import trace_budget_report
+
+    counts = graph.context.get("trace_counts")
+    if counts is None:
+        return []
+    budget = int(graph.context.get("budget", 1))
+    return [(str(key),
+             f"step-builder key traced {n}x (budget {budget}) — "
+             f"compiled-step cache miss on a repeated shape; check the "
+             f"cache key covers every knob that changed")
+            for key, n in trace_budget_report(budget, counts).items()]
+
+
+@register("config-invalid", "error", ("probe",))
+def _config_invalid(graph: ProbeGraph) -> List:
+    """A config × mesh combination the repo's own validators reject
+    (``moe.validate_dispatch_config``, ``engine.validate_decode_config``).
+    The lint CLI converts the ``ValueError`` into this finding so a bad
+    overlap bound passed via ``--config`` yields a report entry and a
+    nonzero exit, not a traceback.  Context: ``config_error`` = the
+    validator's message, ``label`` = the cell name."""
+    err = graph.context.get("config_error")
+    if not err:
+        return []
+    return [(str(graph.context.get("label", "<config>")), str(err))]

@@ -362,6 +362,31 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0):
     return jnp.pad(x, widths), n
 
 
+def expected_grouped_a2a_eqns(cfg: MoEConfig, model_size: int) -> int:
+    """How many ``all_to_all`` equations the grouped dispatch path emits
+    per layer application — the single source of truth for the
+    ``overlap-chunk-count`` lint rule (``repro.analysis``) and the jaxpr
+    witness tests, kept next to the pipeline that emits them.
+
+    Per overlap window: one (flat) counts exchange, plus a dispatch and
+    a combine payload exchange of ``stages`` equations each — 1 for flat,
+    2 for an EFFECTIVE hierarchical a2a (two-stage only when
+    ``1 < a2a_inner < model_size``; otherwise ``core.alltoall`` runs
+    flat).  ``overlap_chunks = P`` multiplies everything: the statically
+    unrolled pipeline must emit P separate window exchanges — a ``fori_loop``
+    would fold them into ONE loop-body equation (the PR 5 scheduler-
+    hiding hazard the lint rule exists to catch).
+    """
+    if cfg.dispatch != "grouped" or model_size <= 1:
+        return 0
+    stages = 1
+    if (cfg.a2a == "hierarchical" and 1 < cfg.a2a_inner
+            and model_size % cfg.a2a_inner == 0
+            and model_size // cfg.a2a_inner > 1):
+        stages = 2
+    return cfg.overlap_chunks * (1 + 2 * stages)
+
+
 def validate_dispatch_config(cfg: MoEConfig, *, model_size: int,
                              model_axis: str = "model",
                              tokens_per_shard: Optional[int] = None) -> None:

@@ -25,7 +25,16 @@ import numpy as np
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "c64": 8, "c128": 16}
+                "pred": 1, "c64": 8, "c128": 16,
+                # fp8 families (ROADMAP low-precision AllToAll payloads):
+                # without these a quantized exchange buffer silently drops
+                # out of the HBM/collective byte counts
+                "f8e4m3fn": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+                "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e4m3": 1, "f8e3m4": 1}
+
+# longest-first so the regex alternation cannot stop at a prefix
+# (``f8e4m3fn`` is a prefix of ``f8e4m3fnuz``)
+_DTYPE_ALT = "|".join(sorted(_DTYPE_BYTES, key=len, reverse=True))
 
 _NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
 _KIND_RE = re.compile(r"\s*([\w\-]+)\(")
@@ -59,8 +68,7 @@ def _parse_def(line: str):
     if not km:
         return None
     return name, type_text, km.group(1)
-_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
-                       r"\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(r"(" + _DTYPE_ALT + r")\[([0-9,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
 _CALL_RE = re.compile(r"(?:calls=|to_apply=|condition=|body=)%?([\w.\-]+)")
 _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -250,18 +258,27 @@ def _op_traffic(op: Op, comps, shapes) -> float:
     return float(sum(shapes[a][0] for a in operands) + op.result_bytes)
 
 
-def analyze(txt: str, *, entry: Optional[str] = None,
-            pod_size: int = 256) -> Dict[str, Any]:
-    comps, shapes = parse_module(txt)
-    if entry is None:
-        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.M)
-        entry = m.group(1) if m else next(iter(comps))
+def find_entry(txt: str, comps) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.M)
+    return m.group(1) if m else next(iter(comps))
 
-    # call graph with multipliers.  Edge kinds: fusion/call (×1, mark
-    # "fused" for fusion so its internal traffic is excluded), while
-    # body+cond (×trip), reduce to_apply (×1, tiny), branches (×1).
+
+def call_graph(comps, entry: str):
+    """Walk the module call graph from ``entry``.
+
+    Returns ``(mult, fused, in_loop)``: per-computation loop-trip
+    multiplier, whether the computation is only reached through fused
+    (traffic-internal) edges, and whether it is reached through a while
+    BODY/COND edge (i.e. executes per loop iteration).  Edge kinds:
+    fusion/call (×1, mark "fused" so internal traffic is excluded),
+    while body+cond (×trip, in-loop), reduce to_apply (×1, tiny),
+    branches (×1).  Shared with the graph-invariant linter
+    (``repro.analysis.hlo``), which needs the same loop attribution the
+    roofline uses.
+    """
     mult: Dict[str, float] = {entry: 1.0}
     fused: Dict[str, bool] = {entry: False}
+    in_loop: Dict[str, bool] = {entry: False}
     stack = [entry]
     seen = set()
     while stack:
@@ -270,6 +287,7 @@ def analyze(txt: str, *, entry: Optional[str] = None,
             continue
         seen.add(c)
         m_c = mult.get(c, 1.0)
+        looped = in_loop.get(c, False)
         for op in comps[c]:
             if op.kind == "while":
                 cm = re.search(r"condition=%?([\w.\-]+)", op.line)
@@ -280,6 +298,7 @@ def analyze(txt: str, *, entry: Optional[str] = None,
                     if target:
                         mult[target] = max(mult.get(target, 0.0), tm)
                         fused.setdefault(target, False)
+                        in_loop[target] = True
                         stack.append(target)
                 continue
             targets = _CALL_RE.findall(op.line)
@@ -290,6 +309,7 @@ def analyze(txt: str, *, entry: Optional[str] = None,
                 if t == c or t not in comps:
                     continue
                 mult[t] = max(mult.get(t, 0.0), m_c)
+                in_loop[t] = in_loop.get(t, False) or looped
                 is_fusion_call = op.kind in ("fusion",) or "calls=" in op.line
                 # to_apply (reduce combiners) treated as fused/internal
                 if "to_apply=" in op.line:
@@ -297,6 +317,15 @@ def analyze(txt: str, *, entry: Optional[str] = None,
                 fused[t] = fused.get(t, True) and is_fusion_call \
                     if t in fused else is_fusion_call
                 stack.append(t)
+    return mult, fused, in_loop
+
+
+def analyze(txt: str, *, entry: Optional[str] = None,
+            pod_size: int = 256) -> Dict[str, Any]:
+    comps, shapes = parse_module(txt)
+    if entry is None:
+        entry = find_entry(txt, comps)
+    mult, fused, _ = call_graph(comps, entry)
 
     flops = 0.0
     hbm = 0.0

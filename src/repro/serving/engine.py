@@ -78,6 +78,18 @@ def clear_step_cache() -> None:
     trace_counts.clear()
 
 
+def trace_budget_report(budget: int = 1, counts=None) -> Dict[tuple, int]:
+    """Step-builder keys that traced MORE than ``budget`` times since the
+    last ``clear_step_cache`` — the retrace probe behind the
+    ``retrace-budget`` lint rule (``repro.analysis``).  Every serving
+    shape should trace exactly once per process (the seed re-jitted a
+    fresh closure per ``generate()`` call); a key above budget means a
+    cache-key leak (an unhashed config field, a fresh mesh per call).
+    ``counts`` defaults to the live ``trace_counts`` probe."""
+    counts = trace_counts if counts is None else counts
+    return {k: int(v) for k, v in counts.items() if int(v) > budget}
+
+
 def validate_dispatch(dispatch: str) -> str:
     """Validate a serving dispatch-mode name against ``DISPATCH_MODES``
     (shared by ``serve_config`` and the ``launch/serve.py`` CLI flag)."""

@@ -109,6 +109,38 @@ def chunked_ce_loss(params, cfg: ModelConfig, h: jax.Array, targets: jax.Array,
     return tot / jnp.maximum(cnt, 1.0)
 
 
+def donation_alias_pairs(tree) -> list:
+    """Leaf paths in ``tree`` (a donated pytree, e.g. a ``TrainState``)
+    that share one buffer.
+
+    The driver donates the whole train state to the compiled step; two
+    leaves backed by the SAME array make XLA's donation reject the alias
+    (or silently un-donate, doubling the state's HBM residency).  This is
+    why ``init_train_state`` builds DISTINCT zero scalars for the
+    counters — the contract the ``donation-alias`` lint rule
+    (``repro.analysis``) enforces.  Returns ``[(path_a, path_b), ...]``
+    for every aliased pair (empty = safe to donate).
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def key(leaf):
+        try:  # committed single-device arrays: compare the real buffer
+            return ("ptr", leaf.unsafe_buffer_pointer())
+        except Exception:  # tracers / sharded arrays: object identity
+            return ("id", id(leaf))
+
+    seen: Dict[Any, str] = {}
+    pairs = []
+    for path, leaf in leaves:
+        name = jax.tree_util.keystr(path)
+        k = key(leaf)
+        if k in seen:
+            pairs.append((seen[k], name))
+        else:
+            seen[k] = name
+    return pairs
+
+
 def _tree_where(ok, new, old):
     """Per-leaf select: ``new`` on a finite step, ``old`` (bitwise) on a
     skipped one.  ``jnp.where(False, nan, x)`` returns ``x`` unchanged."""

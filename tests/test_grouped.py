@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import analysis
 from repro.core import capacity, gating, layout, moe
 from repro.core.config import MoEConfig
 from repro.kernels import ref
@@ -591,14 +592,22 @@ def test_grouped_bwd_matches_ragged_vjp(dtype, rtol, atol, bm):
 
 def test_grouped_bwd_is_pallas_not_ragged_recompute():
     """The backward must run the dlhs/drhs kernels off the residuals —
-    no ragged_dot (whose jax.vjp re-ran the whole forward) anywhere in
-    the gradient jaxpr."""
+    no ragged_dot equation (whose jax.vjp re-ran the whole forward)
+    anywhere in the gradient graph, including custom_vjp sub-jaxprs."""
     lhs = jax.random.normal(RNG, (32, 8))
     rhs = jax.random.normal(RNG, (4, 8, 8))
     sizes = jnp.array([10, 6, 0, 16], jnp.int32)
-    jaxpr = jax.make_jaxpr(jax.grad(
-        lambda l: jnp.sum(grouped_matmul(l, rhs, sizes, True, 16) ** 2)))(lhs)
-    assert "ragged_dot" not in str(jaxpr)
+    g = analysis.trace_graph(
+        jax.grad(lambda l: jnp.sum(grouped_matmul(l, rhs, sizes, True,
+                                                  16) ** 2)),
+        lhs, context={"direction": "grad", "expect_no_ragged": True})
+    assert analysis.run_rule("no-recompute-backward", g) == []
+    # teeth: the raw lax.ragged_dot VJP *does* trip the same rule
+    bad = analysis.trace_graph(
+        jax.grad(lambda l: jnp.sum(jax.lax.ragged_dot(l, rhs, sizes) ** 2)),
+        lhs, context={"direction": "grad", "expect_no_ragged": True})
+    assert any(f.rule == "no-recompute-backward"
+               for f in analysis.run_rule("no-recompute-backward", bad))
 
 
 def test_grouped_ffn_swiglu_grads_pallas_matches_ragged():

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import analysis
 from repro.core import moe
 from repro.core.config import MoEConfig
 
@@ -45,21 +46,25 @@ def _cfg(dispatch, **kw):
 # ---------------------------------------------------------------------------
 
 def test_grouped_tp_runs_grouped_path_not_sort(mesh8):
-    """The jaxpr of the grouped+TP layer must contain the ragged grouped
-    matmul (the dropless compute) — the old fallback lowered to the sort
-    path's dense einsum and no ragged_dot appeared anywhere."""
+    """The traced grouped+TP graph must contain the ragged grouped
+    matmul equation (the dropless compute) — the old fallback lowered to
+    the sort path's dense einsum and no ragged_dot appeared anywhere."""
     cfg = _cfg("grouped")
     p = _params(cfg)
     x = jax.random.normal(RNG, (8, 4, D))
-    jaxpr = str(jax.make_jaxpr(lambda p, v: moe.sharded_moe_apply(
-        mesh8, cfg, p, v, num_experts=E, act="swiglu",
-        expert_tp_axis="data"))(p, x))
-    assert "ragged_dot" in jaxpr
+    g = analysis.trace_graph(
+        lambda p_, v: moe.sharded_moe_apply(mesh8, cfg, p_, v, num_experts=E,
+                                            act="swiglu",
+                                            expert_tp_axis="data"), p, x)
+    assert g.count("ragged_dot") > 0
     # and the TP collectives surround it (gather the segments, reduce
     # the f-contraction) — the capacity-padded (E·C) buffer path would
     # show neither with these shapes
-    assert "all_gather" in jaxpr
-    assert "reduce_scatter" in jaxpr or "psum_scatter" in jaxpr
+    assert g.count("all_gather") + g.count("all_gather_invariant") > 0
+    assert g.count("psum_scatter") + g.count("reduce_scatter") > 0
+    # every primitive sits outside scan/while bodies (statically
+    # unrolled pipeline), so the loop-collective rule stays quiet
+    assert analysis.run_rule("collective-in-loop", g) == []
 
 
 # ---------------------------------------------------------------------------

@@ -8,13 +8,12 @@ jaxpr witnesses that P chunked all-to-alls are actually emitted (a
 fori_loop would fold them into one loop-body collective), and the
 chunk-count / chunk-bound arithmetic holds standalone.
 """
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import analysis
 from repro.core import capacity, layout, moe
 from repro.core.config import MoEConfig
 
@@ -254,12 +253,16 @@ def test_overlap_token_padding_path(mesh_ep4):
 
 # ---------------------------------------------------------------------------
 # jaxpr witness: the pipeline really emits P chunked all-to-alls
+# (structured analysis.trace_graph walk — not a jaxpr-string grep)
 # ---------------------------------------------------------------------------
 
-def _a2a_eqns(mesh, cfg, p, x):
-    jx = str(jax.make_jaxpr(lambda p, v: moe.sharded_moe_apply(
-        mesh, cfg, p, v, num_experts=E, act="swiglu"))(p, x))
-    return jx, len(re.findall(r"\ball_to_all\b", jx))
+def _trace(mesh, cfg, p, x):
+    return analysis.trace_graph(
+        lambda p_, v: moe.sharded_moe_apply(mesh, cfg, p_, v, num_experts=E,
+                                            act="swiglu"),
+        p, x,
+        context={"cfg": cfg, "model_size": 4, "tokens_per_shard": 16,
+                 "d_model": D, "direction": "fwd"})
 
 
 @pytest.mark.parametrize("a2a,inner,per_chunk", [
@@ -273,8 +276,26 @@ def test_overlap_emits_p_chunked_alltoalls(mesh_ep4, a2a, inner, per_chunk):
     x = jax.random.normal(RNG, (4, 16, D))    # T_local=16, K=2 → B=32
     for P in (1, 2, 4):
         cfg = _cfg(P, a2a=a2a, a2a_inner=inner)
-        jx, n = _a2a_eqns(mesh_ep4, cfg, p, x)
-        assert n == per_chunk * P, (a2a, P, n)
-        # and the payload collectives move (M, B/P, d) windows, not the
-        # full bound
-        assert f"f32[4,{32 // P},{D}]" in jx, (a2a, P)
+        g = _trace(mesh_ep4, cfg, p, x)
+        assert g.count("all_to_all") == per_chunk * P, (a2a, P)
+        assert moe.expected_grouped_a2a_eqns(cfg, 4) == per_chunk * P
+        # the overlap-chunk-count rule re-checks the count AND that the
+        # payload exchanges move (M, B/P, d) windows, not the full bound
+        assert analysis.run_rule("overlap-chunk-count", g) == [], (a2a, P)
+        # none of the exchanges fell into a scan/while body
+        assert analysis.run_rule("collective-in-loop", g) == [], (a2a, P)
+
+
+def test_overlap_witness_has_teeth(mesh_ep4):
+    """Lint the P=1 graph against a context claiming P=4: the rule must
+    fire on both the equation count and the unsplit payload windows —
+    i.e. the clean assertions above are not vacuous."""
+    cfg1, cfg4 = _cfg(1), _cfg(4)
+    p = _params(cfg1)
+    x = jax.random.normal(RNG, (4, 16, D))
+    g = _trace(mesh_ep4, cfg1, p, x)
+    g.context["cfg"] = cfg4
+    findings = analysis.run_rule("overlap-chunk-count", g)
+    assert {f.rule for f in findings} == {"overlap-chunk-count"}
+    assert len(findings) == 2, findings            # count + payload window
+    assert all(f.level == "error" for f in findings)
