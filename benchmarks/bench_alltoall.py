@@ -15,23 +15,25 @@ from jax.sharding import PartitionSpec as P
 from benchmarks.common import emit, timeit
 from repro.core import alltoall
 from repro.core.compat import shard_map
-from repro.core.alltoall import (DCN, ETH100, ICI, PCIE, cost_flat,
-                                 cost_hierarchical)
+from repro.core.alltoall import cost_flat, cost_hierarchical
+from repro.launch.mesh import parse_fabric
 
 
 def run(paper: bool = False):
     B = 16e6                                      # paper: ~16 MB per GPU
+    _, (pcie, eth100) = parse_fabric("pcie_eth100")
+    _, (ici, dcn) = parse_fabric("ici_dcn")
     for N, G in [(2, 8), (4, 8), (8, 8), (16, 8)]:
-        f = cost_flat(B, N, G, PCIE, ETH100)
-        h = cost_hierarchical(B, N, G, PCIE, ETH100)
+        f = cost_flat(B, N, G, pcie, eth100)
+        h = cost_hierarchical(B, N, G, pcie, eth100)
         emit(f"a2a/model/gpu-{N}x{G}", h * 1e6,
              f"flat_us={f * 1e6:.0f},speedup={f / h:.2f}x"
              f"{',paper_claims=1.66x' if N == 4 else ''}"
              f"{',paper_claims=2x' if N == 8 else ''}")
     # TPU adaptation: slow dim = DCN (pod boundary), fast dim = ICI
     for N, G in [(2, 16), (4, 16)]:
-        f = cost_flat(B, N, G, ICI, DCN)
-        h = cost_hierarchical(B, N, G, ICI, DCN)
+        f = cost_flat(B, N, G, ici, dcn)
+        h = cost_hierarchical(B, N, G, ici, dcn)
         emit(f"a2a/model/tpu-{N}pods-x{G}", h * 1e6,
              f"flat_us={f * 1e6:.0f},speedup={f / h:.2f}x")
 

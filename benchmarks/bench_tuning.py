@@ -1,0 +1,95 @@
+"""Auto-tuned dispatch plans vs hand-set knobs (core/tuning.py).
+
+Each cell times the full MoE layer twice on the same mesh: once with
+the hand-set grouped knobs the presets used to ship (``a2a="flat"``,
+``overlap_chunks=1``, kernel-default block_m) and once with every
+grouped knob set to ``"auto"`` so ``tuning.resolve_plan`` picks them
+from the α–β cost model.  Both the MEASURED auto-vs-hand ratio and the
+cost model's PREDICTED ratio for the same cell are emitted side by
+side — on this CPU container collectives are emulated, so the measured
+number bounds the resolver's overhead (it must be ~1.0×: resolution
+happens once per trace, never per step) while the predicted column is
+the fabric-level deliverable the tuner actually optimizes.
+
+Cells: grouped-EP (4-way model mesh), grouped-TP ((2,4) data×model
+mesh), and the overlap-pipeline cell (hand-set P=2 vs the resolved P)
+— the same meshes as the ``grouped``/``grouped_overlap`` suites, so
+the numbers are directly comparable.  Tracked under ``run.py --check``
+like every grouped suite.
+"""
+import dataclasses
+
+from benchmarks.bench_grouped import EP_WAYS, TP_MESH, _sharded_setup
+from benchmarks.common import emit, timeit
+from repro.core import tuning
+from repro.core.config import MoEConfig
+
+
+def _auto(cfg: MoEConfig) -> MoEConfig:
+    return dataclasses.replace(
+        cfg, a2a="auto", overlap_chunks="auto", grouped_block_m="auto",
+        grouped_ep_bound_factor="auto")
+
+
+def _cell(key_tag: str, hand: MoEConfig, *, model_size: int,
+          tokens_per_shard: int, d_model: int, paper: bool,
+          mesh_shape, mesh_axes, tp_axis) -> None:
+    setup = _sharded_setup(mesh_shape, mesh_axes, tp_axis,
+                           f"tuning-{key_tag}", paper)
+    if setup is None:
+        return
+    layer_fn, params, x, E, S = setup
+    auto = _auto(hand)
+    plan = tuning.resolve_plan(auto, model_size=model_size,
+                               tokens_per_shard=tokens_per_shard,
+                               d_model=d_model, dtype=x.dtype)
+    t_hand = timeit(layer_fn(hand), params, x)
+    t_auto = timeit(layer_fn(auto), params, x)
+    pred_a2a = (plan.cost_flat / plan.cost_chosen
+                if plan.cost_chosen else 1.0)
+    pred_overlap = (plan.cost_serial / plan.cost_overlapped
+                    if plan.cost_overlapped else 1.0)
+    emit(f"tuning/{key_tag}/hand/S{S}", t_hand,
+         f"a2a={hand.a2a} P={hand.overlap_chunks}")
+    emit(f"tuning/{key_tag}/auto/S{S}", t_auto,
+         f"resolved a2a={plan.a2a} inner={plan.a2a_inner} "
+         f"P={plan.overlap_chunks} block_m={plan.grouped_block_m}; "
+         f"measured vs_hand={t_hand / t_auto:.2f}x; "
+         f"predicted a2a={pred_a2a:.2f}x overlap={pred_overlap:.2f}x "
+         f"({plan.fabric}, {plan.payload_bytes / 1e3:.0f}KB)",
+         vs_hand=t_hand / t_auto,
+         predicted_a2a=pred_a2a,
+         predicted_overlap=pred_overlap)
+
+
+def run(paper: bool = False):
+    prev = tuning.set_tuning(mode="auto", fabric="ici_dcn")
+    try:
+        d = 512 if paper else 128
+        S = 2048 if paper else 512
+        grouped = MoEConfig(num_experts=16, gate="switch",
+                            capacity_factor=1.25, dispatch="grouped",
+                            a2a="flat", overlap_chunks=1)
+        # EP: 4-way model mesh — tokens_per_shard matches
+        # sharded_moe_apply's S // n_dev at trace time
+        _cell("ep4", grouped, model_size=EP_WAYS,
+              tokens_per_shard=S // EP_WAYS, d_model=d, paper=paper,
+              mesh_shape=(EP_WAYS,), mesh_axes=("model",), tp_axis=None)
+        # TP×EP: (data=2, model=4) mesh, expert f dim over data
+        n_tp = TP_MESH[0] * TP_MESH[1]
+        _cell("tp", grouped, model_size=TP_MESH[1],
+              tokens_per_shard=S // n_tp, d_model=d, paper=paper,
+              mesh_shape=TP_MESH, mesh_axes=("data", "model"),
+              tp_axis="data")
+        # overlap: hand-set P=2 (the grouped_overlap suite's middle
+        # point) vs whatever P the resolver picks for this cell
+        overlap2 = dataclasses.replace(grouped, overlap_chunks=2)
+        _cell("overlap", overlap2, model_size=EP_WAYS,
+              tokens_per_shard=S // EP_WAYS, d_model=d, paper=paper,
+              mesh_shape=(EP_WAYS,), mesh_axes=("model",), tp_axis=None)
+    finally:
+        tuning.set_tuning(mode=prev[0], fabric=prev[1])
+
+
+if __name__ == "__main__":
+    run()

@@ -39,7 +39,8 @@ FIGS = {"topk": "3", "layout": "4", "alltoall": "7", "breakdown": "1",
         "overall": "8", "grouped": "4+", "grouped_bwd": "4+ (train step)",
         "grouped_overlap": "4+ (overlapped pipeline)",
         "decode": "4+ (serving decode microbench)",
-        "traffic": "4+ (serving workload replay)"}
+        "traffic": "4+ (serving workload replay)",
+        "tuning": "7+ (auto-tuned dispatch plans vs hand-set knobs)"}
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_moe.json"
 
@@ -173,7 +174,7 @@ def main() -> None:
         JSON_PATH = pathlib.Path(args.json)
     from benchmarks import (bench_alltoall, bench_breakdown, bench_decode,
                             bench_grouped, bench_layout, bench_overall,
-                            bench_topk, bench_traffic)
+                            bench_topk, bench_traffic, bench_tuning)
     # suite name → run callable; grouped_bwd is the fwd+bwd training-path
     # suite (bench_grouped.run_bwd) — part of the default list and thus
     # of the --check regression gate, so perf PRs can't silently skip it;
@@ -184,7 +185,8 @@ def main() -> None:
             "overall": bench_overall.run, "grouped": bench_grouped.run,
             "grouped_bwd": bench_grouped.run_bwd,
             "grouped_overlap": bench_grouped.run_overlap,
-            "decode": bench_decode.run, "traffic": bench_traffic.run}
+            "decode": bench_decode.run, "traffic": bench_traffic.run,
+            "tuning": bench_tuning.run}
     wanted = args.only.split(",") if args.only else list(mods)
     unknown = [w for w in wanted if w not in mods]
     if unknown:

@@ -6,7 +6,10 @@
   PYTHONPATH=src python -m repro.analysis.lint --list
 
 Traces the standard dispatch config matrix — sort/grouped × {1-rank,
-EP4, TP2, EP2×TP2} × flat/hier × overlap P ∈ {1, 2, 4} — through
+EP4, TP2, EP2×TP2} × flat/hier × overlap P ∈ {1, 2, 4}, plus one fully
+auto-tuned cell per mesh (``grouped/<mesh>/auto/Pauto``: every grouped
+knob the ``core/tuning.py`` sentinel, checked by the
+``tuned-plan-consistency`` rule) — through
 ``sharded_moe_apply`` on the 8-fake-CPU-device backend, runs every
 registered jaxpr rule over the forward graphs and (grouped cells, the
 Pallas kernel path) the gradient graphs, lints one representative cell's
@@ -53,7 +56,8 @@ MESHES: Dict[str, Tuple[Tuple[int, ...], Tuple[str, ...], Optional[str]]] = {
     "tp2":    ((2, 1), ("data", "model"), "data"),
     "ep2tp2": ((2, 2), ("data", "model"), "data"),
 }
-A2A = {"flat": ("flat", 1), "hier": ("hierarchical", 2)}
+A2A = {"flat": ("flat", 1), "hier": ("hierarchical", 2),
+       "auto": ("auto", 1)}
 
 # the representative cell whose COMPILED module gets the HLO-side pass
 HLO_CELL = "grouped/ep4/flat/P2"
@@ -88,8 +92,12 @@ def matrix_cells() -> List[str]:
             cells.append(f"sort/{mesh_key}/{a2a}/P1")
             for P in (1, 2, 4):
                 cells.append(f"grouped/{mesh_key}/{a2a}/P{P}")
+        # fully auto-tuned cell: every grouped knob a sentinel, resolved
+        # by core/tuning.py — linted by tuned-plan-consistency
+        cells.append(f"grouped/{mesh_key}/auto/Pauto")
     # serving step-BUILD validation cells (engine.validate_decode_config)
-    cells += ["decode/r1/grouped/P1", "decode/ep4/grouped/P1"]
+    cells += ["decode/r1/grouped/P1", "decode/ep4/grouped/P1",
+              "decode/ep4/grouped/Pauto"]
     return cells
 
 
@@ -115,10 +123,13 @@ def parse_cell(name: str) -> Dict:
     if (dispatch not in DISPATCH_MODES or mesh_key not in MESHES
             or a2a not in A2A or not p.startswith("P")):
         raise ValueError(err)
-    try:
-        P = int(p[1:])
-    except ValueError:
-        raise ValueError(err)
+    if p == "Pauto":
+        P = "auto"
+    else:
+        try:
+            P = int(p[1:])
+        except ValueError:
+            raise ValueError(err)
     return {"name": name, "decode": parts[0] == "decode",
             "dispatch": dispatch, "mesh": mesh_key, "a2a": a2a, "P": P}
 
@@ -126,9 +137,14 @@ def parse_cell(name: str) -> Dict:
 def _cell_cfg(spec: Dict, *, use_pallas: bool = False):
     from repro.core.config import MoEConfig
     a2a, inner = A2A[spec["a2a"]]
+    kw = {}
+    if spec["a2a"] == "auto":
+        # the fully auto-tuned cell carries every sentinel the tuner owns
+        kw.update(grouped_block_m="auto", grouped_ep_bound_factor="auto")
     return MoEConfig(num_experts=E, dispatch=spec["dispatch"], gate="topk",
                      top_k=2, capacity_factor=8.0, a2a=a2a, a2a_inner=inner,
-                     overlap_chunks=spec["P"], use_pallas_gate=use_pallas)
+                     overlap_chunks=spec["P"], use_pallas_gate=use_pallas,
+                     **kw)
 
 
 def lint_cell(name: str, rules=None) -> List:
@@ -150,7 +166,8 @@ def lint_cell(name: str, rules=None) -> List:
     cfg = _cell_cfg(spec)
     try:
         moe.validate_dispatch_config(cfg, model_size=model_size,
-                                     tokens_per_shard=T)
+                                     tokens_per_shard=T, d_model=D_MODEL,
+                                     dtype=jnp.bfloat16)
     except ValueError as e:
         return analysis.lint_probe(config_error=str(e), label=name)
 
@@ -159,7 +176,8 @@ def lint_cell(name: str, rules=None) -> List:
     x = jax.random.normal(jax.random.PRNGKey(1), (*TOKENS, D_MODEL),
                           jnp.bfloat16)
     ctx = {"cfg": cfg, "model_size": model_size, "tokens_per_shard": T,
-           "d_model": D_MODEL, "label": name, "direction": "fwd"}
+           "d_model": D_MODEL, "dtype": jnp.bfloat16, "label": name,
+           "direction": "fwd"}
 
     def fwd(p, v):
         return moe.sharded_moe_apply(mesh, cfg, p, v, num_experts=E,

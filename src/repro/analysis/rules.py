@@ -10,6 +10,12 @@ the regression it guards), expressed over the structured walkers in
   overlap-chunk-count     PR 5: the pipeline must emit exactly 3P flat /
                           5P hierarchical all-to-alls with (M, B/P, d)
                           payload windows for ``overlap_chunks = P``.
+  tuned-plan-consistency  PR 9: a graph traced under an "auto"-knob
+                          config must carry exactly the AllToAll
+                          count/payload windows of the TunedPlan
+                          ``core/tuning.py`` resolves for that cell —
+                          "auto" must never silently change a traced
+                          graph shape.
   no-recompute-backward   PR 3: the grouped backward must run the Pallas
                           dlhs/drhs kernels off the residuals — a
                           ``ragged_dot`` in a grad graph is the VJP
@@ -209,11 +215,16 @@ def _overlap_chunk_count(graph: JaxprGraph) -> List:
     from repro.core import capacity
     from repro.core import moe as moe_lib
 
+    from repro.core import tuning
+
     ctx = graph.context
     cfg = ctx.get("cfg")
     model_size = int(ctx.get("model_size", 1))
     if (cfg is None or cfg.dispatch != "grouped" or model_size <= 1
-            or ctx.get("direction", "fwd") != "fwd"):
+            or ctx.get("direction", "fwd") != "fwd"
+            or tuning.has_auto_knobs(cfg)):
+        # "auto"-knob cells are owned by tuned-plan-consistency, which
+        # resolves the sentinels the same way the trace did
         return []
     expected = moe_lib.expected_grouped_a2a_eqns(cfg, model_size)
     got = graph.count("all_to_all")
@@ -243,6 +254,65 @@ def _overlap_chunk_count(graph: JaxprGraph) -> List:
                     f"windows (bound B={B}, P={P}), found "
                     f"{len(payload)} — the microchunk windows did not "
                     f"split the bound"))
+    return out
+
+
+@register("tuned-plan-consistency", "error", ("jaxpr",))
+def _tuned_plan_consistency(graph: JaxprGraph) -> List:
+    """A graph traced under an ``"auto"``-knob config must match the
+    knobs ``core/tuning.py`` resolves for that cell: exactly
+    ``moe.expected_grouped_a2a_eqns(resolved, M)`` ``all_to_all``
+    equations, whose payload exchanges move the resolved plan's
+    ``(M, B/P, d)`` windows.  A mismatch means the trace and the tuner
+    disagreed — a non-deterministic resolver, a code path reading the
+    sentinel directly, or a stale plan cache — i.e. ``"auto"`` silently
+    changed a traced graph shape.  Applies to forward grouped-EP graphs
+    traced with ``cfg``/``model_size``/``tokens_per_shard``/``d_model``
+    context where ``cfg`` carries a sentinel (PR 9 convention: concrete
+    configs stay owned by ``overlap-chunk-count``).
+    """
+    from repro.core import capacity
+    from repro.core import moe as moe_lib
+    from repro.core import tuning
+
+    ctx = graph.context
+    cfg = ctx.get("cfg")
+    model_size = int(ctx.get("model_size", 1))
+    T = ctx.get("tokens_per_shard")
+    d = ctx.get("d_model")
+    if (cfg is None or not tuning.has_auto_knobs(cfg)
+            or cfg.dispatch != "grouped" or model_size <= 1
+            or ctx.get("direction", "fwd") != "fwd"
+            or T is None or d is None):
+        return []
+    rcfg = tuning.resolve_moe_config(
+        cfg, model_size=model_size, tokens_per_shard=int(T),
+        d_model=int(d), dtype=ctx.get("dtype"))
+    expected = moe_lib.expected_grouped_a2a_eqns(rcfg, model_size)
+    got = graph.count("all_to_all")
+    out = []
+    if got != expected:
+        out.append(("all_to_all",
+                    f"resolved TunedPlan (a2a={rcfg.a2a!r}, a2a_inner="
+                    f"{rcfg.a2a_inner}, overlap_chunks="
+                    f"{rcfg.overlap_chunks}) expects {expected} "
+                    f"all_to_all equations, traced {got} — the graph "
+                    f"does not match what the tuner resolved for this "
+                    f"cell"))
+    B = capacity.grouped_segment_bound(rcfg, int(T), model_size)
+    P = rcfg.overlap_chunks
+    if B % P:
+        return out
+    stages = 2 if expected == P * 5 else 1
+    payload = _payload_sites(graph, model_size, B // P, int(d))
+    want_payload = 2 * stages * P
+    if len(payload) != want_payload:
+        out.append(("all_to_all",
+                    f"resolved TunedPlan expects {want_payload} payload "
+                    f"all_to_all equations moving ({model_size}, "
+                    f"{B // P}, {d}) windows (bound B={B}, P={P}), "
+                    f"found {len(payload)} — the traced windows differ "
+                    f"from the resolved plan"))
     return out
 
 

@@ -20,7 +20,8 @@ CONFIG = ModelConfig(
                               rope_theta=500_000.0),
     moe=MoEConfig(num_experts=16, top_k=4, gate="topk",
                   capacity_factor=1.25, d_ff_expert=10752,
-                  dispatch="sort", a2a="flat"),
+                  dispatch="sort", a2a="auto", overlap_chunks="auto",
+                  grouped_block_m="auto", grouped_ep_bound_factor="auto"),
     act="swiglu",
     source="DBRX [hf:databricks/dbrx-base]",
 )

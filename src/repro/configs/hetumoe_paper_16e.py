@@ -19,7 +19,8 @@ CONFIG = ModelConfig(
     attention=AttentionConfig(num_heads=16, num_kv_heads=16),
     moe=MoEConfig(num_experts=16, top_k=1, gate="switch",
                   capacity_factor=1.25, d_ff_expert=2048,
-                  dispatch="sort", a2a="flat"),
+                  dispatch="sort", a2a="auto", overlap_chunks="auto",
+                  grouped_block_m="auto", grouped_ep_bound_factor="auto"),
     act="relu",
     source="HetuMoE paper §3.2 (16e, d_ff=2048, seq=1024, d=2048)",
 )

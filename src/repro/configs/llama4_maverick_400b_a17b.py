@@ -21,7 +21,9 @@ CONFIG = ModelConfig(
                               rope_theta=500_000.0),
     moe=MoEConfig(num_experts=128, top_k=1, gate="switch",
                   capacity_factor=1.25, d_ff_expert=8192,
-                  num_shared_experts=1, dispatch="sort", a2a="flat"),
+                  num_shared_experts=1, dispatch="sort", a2a="auto",
+                  overlap_chunks="auto", grouped_block_m="auto",
+                  grouped_ep_bound_factor="auto"),
     act="swiglu",
     source="Llama 4 [hf:meta-llama/Llama-4-Scout-17B-16E]",
 )

@@ -168,6 +168,15 @@ DCN = LinkSpec(alpha=50e-6, beta=1 / 6.25e9)
 PCIE = LinkSpec(alpha=5e-6, beta=1 / 12e9)
 ETH100 = LinkSpec(alpha=50e-6, beta=1 / 12.5e9)
 
+# Named (fast, slow) fabric pairs — the vocabulary of the ``--fabric``
+# CLI flag (``launch/mesh.parse_fabric``) and the auto-tuner's static
+# table (``core/tuning.py``; a startup calibration can replace the pair
+# with measured α–β fits).  Keep keys lowercase: parse_fabric folds case.
+FABRICS = {
+    "ici_dcn": (ICI, DCN),          # TPU pod: ICI fast dim, DCN pod hop
+    "pcie_eth100": (PCIE, ETH100),  # paper's GPU cluster (Fig. 7)
+}
+
 
 def cost_flat(bytes_per_device: float, N: int, G: int,
               fast: LinkSpec, slow: LinkSpec) -> float:

@@ -55,6 +55,14 @@ def grouped_segment_bound(cfg: MoEConfig, num_tokens: int, model_size: int,
     total = num_tokens * k
     dropless = _round_up(total, align)
     f = cfg.grouped_ep_bound_factor
+    if isinstance(f, str):
+        # "auto" must be resolved (core/tuning.resolve_moe_config) before
+        # any bound is derived — a sentinel reaching arithmetic here would
+        # raise an opaque TypeError deep in a trace
+        raise ValueError(
+            f"grouped_segment_bound: grouped_ep_bound_factor={f!r} is "
+            f"unresolved — resolve 'auto' knobs first "
+            f"(core/tuning.resolve_moe_config)")
     if model_size <= 1 or f is None:
         return dropless
     b = max(align, _round_up(math.ceil(total / model_size * f), align))
@@ -98,6 +106,11 @@ def grouped_overlap_chunk_bound(cfg: MoEConfig, bound: int) -> int:
     every window.
     """
     chunks = cfg.overlap_chunks
+    if isinstance(chunks, str):
+        raise ValueError(
+            f"grouped_overlap_chunk_bound: overlap_chunks={chunks!r} is "
+            f"unresolved — resolve 'auto' knobs first "
+            f"(core/tuning.resolve_moe_config)")
     if chunks <= 1:
         return bound
     if bound % chunks:

@@ -25,6 +25,15 @@ GATE_STRATEGIES = (
     "dense_to_sparse", # Nie et al. 2021 — gumbel-softmax annealed density
 )
 
+# The auto-tuning sentinel: a grouped-path knob set to AUTO is resolved
+# into a concrete value by ``core/tuning.py`` from the α–β cost model at
+# the existing choke points (``moe.sharded_moe_apply`` at trace time,
+# the serving step builders at step-BUILD time).  Explicit values are
+# ALWAYS honored verbatim — the resolver never touches a knob the user
+# set, so explicit-int configs behave bitwise-identically to a build
+# without the tuner.
+AUTO = "auto"
+
 A2A_MODES = ("flat", "hierarchical")
 # sort    = HetuMoE layout-transform into the capacity-padded (E·C, d) buffer
 # dense   = one-hot einsum baseline (GShard/DeepSpeed)
@@ -52,14 +61,23 @@ class MoEConfig:
     num_prototypes: int = 1                # for ktop1 (M6)
     num_groups: int = 1                    # for sam hierarchical routing
     dispatch: str = "sort"                 # see DISPATCH_MODES above
-    a2a: str = "flat"                      # "flat" | "hierarchical"
+    # AllToAll mode: "flat" | "hierarchical" | "auto".  "auto" scores
+    # both modes (and every valid a2a_inner factoring) with the α–β cost
+    # model at the shape being traced/built (core/tuning.py) and picks
+    # the cheaper one; it resolves a2a_inner too, so an explicit
+    # a2a_inner alongside a2a="auto" is ignored.  Explicit modes are
+    # honored verbatim.
+    a2a: str = "flat"
     a2a_inner: int = 4                     # inner group size for hierarchical a2a
     # Grouped-EP segment bound: per-(source, destination)-rank row budget
     # for the grouped AllToAll, as a multiple of the balanced share
     # T·K/model_size.  None → T·K (any single rank may receive every
     # assignment: truly dropless, maximal padding).  Smaller values trade
     # exchange-buffer padding for sort-style drops when one rank's demand
-    # exceeds the bound.  See capacity.grouped_segment_bound.
+    # exceeds the bound.  "auto" resolves to None: the tuner never picks
+    # a lossy bound, because drops change numerics — the sentinel exists
+    # so presets can mark the knob tuner-owned uniformly.  See
+    # capacity.grouped_segment_bound.
     grouped_ep_bound_factor: Optional[float] = None
     aux_loss_weight: float = 0.01
     router_z_loss_weight: float = 0.0
@@ -72,6 +90,9 @@ class MoEConfig:
     use_pallas_gate: bool = False
     # Row-block size for the grouped-matmul kernels (fwd, dlhs, drhs).
     # None → the kernel default (kernels/grouped_ffn.DEFAULT_BLOCK_M).
+    # "auto" → min(kernel default, the per-window buffer rows rounded to
+    # the sublane multiple), so tiny decode windows stop padding to a
+    # full 128-row block.  Explicit ints are honored verbatim.
     grouped_block_m: Optional[int] = None
     # Overlapped (chunked) grouped pipeline: split the bounded expert-
     # sorted dispatch buffer into this many static microchunks and
@@ -80,6 +101,10 @@ class MoEConfig:
     # Grouped dispatch only.  Must divide the grouped segment bound —
     # checked where the bound is known, since the bound depends on the
     # per-shard token count (capacity.grouped_overlap_chunk_bound).
+    # "auto" → argmin of alltoall.cost_pipelined over the divisor ladder
+    # {1, 2, 4, 8} ∩ divisors(bound); explicit ints are honored verbatim
+    # (including ones the tuner would never pick — bound divisibility is
+    # still validated, with the usual ValueError).
     overlap_chunks: int = 1
 
     def __post_init__(self):
@@ -89,10 +114,10 @@ class MoEConfig:
             raise ValueError(
                 f"MoEConfig.gate={self.gate!r} is not a known gating "
                 f"strategy; valid options: {GATE_STRATEGIES}")
-        if self.a2a not in A2A_MODES:
+        if self.a2a not in A2A_MODES + (AUTO,):
             raise ValueError(
                 f"MoEConfig.a2a={self.a2a!r} is not a known AllToAll "
-                f"mode; valid options: {A2A_MODES}")
+                f"mode; valid options: {A2A_MODES + (AUTO,)}")
         if self.dispatch not in DISPATCH_MODES:
             raise ValueError(
                 f"MoEConfig.dispatch={self.dispatch!r} is not a known "
@@ -100,19 +125,25 @@ class MoEConfig:
         if self.a2a_inner < 1:
             raise ValueError(
                 f"MoEConfig.a2a_inner must be >= 1, got {self.a2a_inner}")
-        if (self.grouped_ep_bound_factor is not None
-                and self.grouped_ep_bound_factor <= 0):
+        f = self.grouped_ep_bound_factor
+        if f is not None and f != AUTO and (
+                not isinstance(f, (int, float)) or f <= 0):
             raise ValueError(
-                f"MoEConfig.grouped_ep_bound_factor must be positive or "
-                f"None, got {self.grouped_ep_bound_factor}")
-        if self.grouped_block_m is not None and self.grouped_block_m < 1:
+                f"MoEConfig.grouped_ep_bound_factor must be positive, "
+                f"None, or {AUTO!r}, got {f!r}")
+        bm = self.grouped_block_m
+        if bm is not None and bm != AUTO and (
+                not isinstance(bm, int) or bm < 1):
             raise ValueError(
-                f"MoEConfig.grouped_block_m must be >= 1 or None, got "
-                f"{self.grouped_block_m}")
-        if not isinstance(self.overlap_chunks, int) or self.overlap_chunks < 1:
+                f"MoEConfig.grouped_block_m must be an int >= 1, None, or "
+                f"{AUTO!r}, got {bm!r}")
+        if self.overlap_chunks != AUTO and (
+                not isinstance(self.overlap_chunks, int)
+                or self.overlap_chunks < 1):
             raise ValueError(
                 f"MoEConfig.overlap_chunks must be an int >= 1 (1 disables "
-                f"the overlapped pipeline), got {self.overlap_chunks!r}")
+                f"the overlapped pipeline) or {AUTO!r}, got "
+                f"{self.overlap_chunks!r}")
 
 
 @dataclass(frozen=True)

@@ -63,7 +63,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import alltoall, balance, capacity, gating, layout
+from repro.core import alltoall, balance, capacity, gating, layout, tuning
 from repro.core.compat import shard_map
 from repro.core.config import MoEConfig
 
@@ -377,6 +377,12 @@ def expected_grouped_a2a_eqns(cfg: MoEConfig, model_size: int) -> int:
     would fold them into ONE loop-body equation (the PR 5 scheduler-
     hiding hazard the lint rule exists to catch).
     """
+    if tuning.has_auto_knobs(cfg):
+        # a sentinel here would be silently counted as flat/P="auto" —
+        # the caller must hand over the concrete cell it actually traced
+        raise ValueError(
+            "expected_grouped_a2a_eqns needs a concrete config — resolve "
+            "'auto' knobs first (core/tuning.resolve_moe_config)")
     if cfg.dispatch != "grouped" or model_size <= 1:
         return 0
     stages = 1
@@ -389,7 +395,9 @@ def expected_grouped_a2a_eqns(cfg: MoEConfig, model_size: int) -> int:
 
 def validate_dispatch_config(cfg: MoEConfig, *, model_size: int,
                              model_axis: str = "model",
-                             tokens_per_shard: Optional[int] = None) -> None:
+                             tokens_per_shard: Optional[int] = None,
+                             d_model: Optional[int] = None,
+                             dtype=None) -> None:
     """Raise ``ValueError`` for cfg × mesh combinations that would
     otherwise only surface at trace time, deep inside ``shard_map``.
 
@@ -401,7 +409,36 @@ def validate_dispatch_config(cfg: MoEConfig, *, model_size: int,
     count is known to the caller, e.g. the decode batch), the grouped
     overlap-pipeline bound divisibility is checked too
     (:func:`capacity.grouped_overlap_chunk_bound`).
+
+    ``"auto"`` knobs (core/tuning.py) are resolved first when
+    ``tokens_per_shard`` is known — the checks then run against, and any
+    error message names, the RESOLVED values.  Without a token count
+    there is nothing concrete to check yet: every sentinel resolves at a
+    choke point where the count is static, and the resolver only emits
+    combinations these checks accept.
     """
+    auto_cfg = None
+    if tuning.has_auto_knobs(cfg):
+        if tokens_per_shard is None:
+            return
+        auto_cfg = cfg
+        cfg = tuning.resolve_moe_config(
+            cfg, model_size=model_size, tokens_per_shard=tokens_per_shard,
+            d_model=d_model if d_model is not None else 1024, dtype=dtype)
+    try:
+        _validate_concrete(cfg, model_size=model_size, model_axis=model_axis,
+                           tokens_per_shard=tokens_per_shard)
+    except ValueError as e:
+        if auto_cfg is not None:
+            raise ValueError(
+                f"{e} [{tuning.describe_resolution(auto_cfg, cfg)}]"
+            ) from None
+        raise
+
+
+def _validate_concrete(cfg: MoEConfig, *, model_size: int,
+                       model_axis: str,
+                       tokens_per_shard: Optional[int]) -> None:
     if cfg.overlap_chunks > 1 and cfg.dispatch != "grouped":
         # the pipeline chunks the bounded expert-sorted buffer, which
         # only the grouped path builds — silently ignoring the setting
@@ -470,6 +507,13 @@ def sharded_moe_apply(mesh: jax.sharding.Mesh, cfg: MoEConfig,
     params = {k: (v.astype(x.dtype) if k != "gate_w" else v)
               for k, v in params.items()}
 
+    # trace-time "auto" resolution (core/tuning.py): the per-shard token
+    # count, width and dtype are all static here, so the resolved cfg is
+    # a pure function of the traced shapes — the same call shape always
+    # resolves (and therefore traces) identically.
+    cfg = tuning.resolve_moe_config(
+        cfg, model_size=model_size, tokens_per_shard=toks.shape[0] // n_dev,
+        d_model=d, dtype=x.dtype)
     validate_dispatch_config(cfg, model_size=model_size,
                              model_axis=model_axis)
 

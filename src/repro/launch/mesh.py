@@ -69,6 +69,32 @@ def mesh_cli_arg(spec: str):
         raise argparse.ArgumentTypeError(str(e))
 
 
+def parse_fabric(name: str):
+    """Parse a ``--fabric`` name into ``(name, (fast, slow))`` — a named
+    ``LinkSpec`` pair from ``core/alltoall.FABRICS`` (``ici_dcn``,
+    ``pcie_eth100``).  The pair feeds the auto-tuner's α–β scoring
+    (``core/tuning.py``) and the cost-model benchmarks; a typo raises a
+    ValueError listing the valid fabrics (same convention as
+    :func:`parse_mesh`)."""
+    from repro.core import alltoall
+    key = str(name).strip().lower()
+    if key not in alltoall.FABRICS:
+        raise ValueError(
+            f"--fabric expects one of {tuple(alltoall.FABRICS)} (named "
+            f"fast/slow LinkSpec pairs in core/alltoall.py), got {name!r}")
+    return key, alltoall.FABRICS[key]
+
+
+def fabric_cli_arg(name: str):
+    """argparse ``type=`` adapter for :func:`parse_fabric` (mirrors
+    :func:`mesh_cli_arg`)."""
+    import argparse
+    try:
+        return parse_fabric(name)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e))
+
+
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

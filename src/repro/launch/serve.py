@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import tuning
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as T
 from repro.serving import generate
@@ -37,14 +38,16 @@ def dispatch_cli_arg(name: str):
 
 def run(arch: str, *, smoke: bool, batch: int, prompt_len: int, gen: int,
         mesh_shape=(1, 1), temperature: float = 0.0, seed: int = 0,
-        dispatch=None):
+        dispatch=None, tune: str = "auto", fabric=None):
     cfg = configs.smoke_config(arch) if smoke else configs.get_config(arch)
     assert cfg.has_decode, f"{arch} is encoder-only"
     cfg = serve_config(cfg, dispatch=dispatch)
+    mesh = mesh_lib.make_smoke_mesh(tuple(mesh_shape))
+    tmode, tfab = tuning.configure(tune, fabric, mesh=mesh)
     if cfg.moe is not None:
         print(f"dispatch={cfg.moe.dispatch} "
-              f"({'flag' if dispatch else 'config default'})")
-    mesh = mesh_lib.make_smoke_mesh(tuple(mesh_shape))
+              f"({'flag' if dispatch else 'config default'}) "
+              f"tune={tmode} fabric={tfab}")
     rng = jax.random.PRNGKey(seed)
     params = T.init_model(rng, cfg)
     if cfg.frontend is None:
@@ -74,11 +77,21 @@ def main():
     ap.add_argument("--dispatch", default=None, type=dispatch_cli_arg,
                     help="MoE decode dispatch mode override "
                          "(sort|grouped; validated, no silent fallback)")
+    ap.add_argument("--tune", default="auto",
+                    choices=list(tuning.TUNE_MODES),
+                    help="'auto' resolves MoEConfig 'auto' knobs from the "
+                         "α–β cost model, 'off' pins the static defaults, "
+                         "'calibrate' fits α–β from measured AllToAlls "
+                         "(persisted to TUNE_moe.json)")
+    ap.add_argument("--fabric", default="ici_dcn",
+                    type=mesh_lib.fabric_cli_arg,
+                    help="named fast/slow LinkSpec pair the tuner scores "
+                         "against (ici_dcn | pcie_eth100)")
     args = ap.parse_args()
     run(args.arch, smoke=args.smoke, batch=args.batch,
         prompt_len=args.prompt_len, gen=args.gen,
         temperature=args.temperature, mesh_shape=args.mesh,
-        dispatch=args.dispatch)
+        dispatch=args.dispatch, tune=args.tune, fabric=args.fabric)
 
 
 if __name__ == "__main__":

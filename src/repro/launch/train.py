@@ -32,6 +32,7 @@ import jax
 
 from repro import configs
 from repro.core import faults as faults_mod
+from repro.core import tuning
 from repro.core.config import TrainConfig
 from repro.data import SyntheticLM
 from repro.launch import mesh as mesh_lib
@@ -45,7 +46,8 @@ def run(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
         mesh_shape=(1, 1), log_every: int = 10, ckpt_dir: str = None,
         ckpt_every: int = None, ckpt_keep: int = 3, resume: bool = False,
         seed: int = 0, loss_scale="none", history_out: str = None,
-        faults: faults_mod.FaultPlan = None):
+        faults: faults_mod.FaultPlan = None, tune: str = "auto",
+        fabric=None):
     if (ckpt_every or resume) and not ckpt_dir:
         raise ValueError("--ckpt-every/--resume require --ckpt-dir")
     cfg = configs.smoke_config(arch) if smoke else configs.get_config(arch)
@@ -55,6 +57,9 @@ def run(arch: str, *, steps: int, batch: int, seq: int, smoke: bool,
                        total_steps=steps, microbatches=microbatches,
                        remat=remat, seed=seed, loss_scale=ls)
     mesh = mesh_lib.make_smoke_mesh(tuple(mesh_shape))
+    tmode, tfab = tuning.configure(tune, fabric, mesh=mesh)
+    if cfg.moe is not None:
+        print(f"tune={tmode} fabric={tfab}")
     rng = jax.random.PRNGKey(seed)
     state = init_train_state(rng, cfg, tcfg)
     start = 0
@@ -135,6 +140,17 @@ def main():
     ap.add_argument("--inject", action="append", default=[],
                     help="fault spec 'site:mode@steps' (repeatable), e.g. "
                          "'train.grads:nan@3' or 'ckpt.data_tmp_written:kill@20'")
+    ap.add_argument("--tune", default="auto",
+                    choices=list(tuning.TUNE_MODES),
+                    help="'auto' resolves MoEConfig 'auto' knobs from the "
+                         "α–β cost model, 'off' pins them to the static "
+                         "defaults, 'calibrate' measures a few AllToAll "
+                         "shapes once and fits α–β (persisted to "
+                         "TUNE_moe.json)")
+    ap.add_argument("--fabric", default="ici_dcn",
+                    type=mesh_lib.fabric_cli_arg,
+                    help="named fast/slow LinkSpec pair the tuner scores "
+                         "against (ici_dcn | pcie_eth100)")
     args = ap.parse_args()
     faults = faults_mod.plan_from_specs(args.inject) if args.inject else None
     run(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
@@ -143,7 +159,7 @@ def main():
         ckpt_every=args.ckpt_every, ckpt_keep=args.ckpt_keep,
         resume=args.resume, log_every=args.log_every, seed=args.seed,
         loss_scale=args.loss_scale, history_out=args.history_out,
-        faults=faults)
+        faults=faults, tune=args.tune, fabric=args.fabric)
 
 
 if __name__ == "__main__":

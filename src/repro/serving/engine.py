@@ -59,6 +59,7 @@ from jax import lax
 
 from repro.core import faults as faults_mod
 from repro.core import moe as moe_lib
+from repro.core import tuning
 from repro.core.config import DISPATCH_MODES, ModelConfig
 from repro.models import transformer as T
 
@@ -148,7 +149,26 @@ def validate_decode_config(cfg: ModelConfig, mesh, batch: int, *,
     model_size = 1 if mesh is None else int(mesh.shape.get("model", 1))
     moe_lib.validate_dispatch_config(
         cfg.moe, model_size=model_size,
-        tokens_per_shard=_tokens_per_shard(mesh, batch))
+        tokens_per_shard=_tokens_per_shard(mesh, batch),
+        d_model=cfg.d_model, dtype=cfg.dtype)
+
+
+def resolve_decode_config(cfg: ModelConfig, mesh, batch: int) -> ModelConfig:
+    """The concrete decode-step config: ``"auto"`` MoE knobs
+    (core/tuning.py) resolved at this decode batch's static per-shard
+    token count.  ``build_decode`` keys its compiled-step cache on the
+    RESULT, so the resolved knobs join the cache key; resolution is
+    deterministic and memoized, which keeps repeated builds on one cache
+    entry (``trace_counts`` shows no new retraces vs explicit ints).
+    Configs without sentinels pass through unchanged."""
+    if cfg.moe is None or not tuning.has_auto_knobs(cfg.moe):
+        return cfg
+    model_size = 1 if mesh is None else int(mesh.shape.get("model", 1))
+    moe_cfg = tuning.resolve_moe_config(
+        cfg.moe, model_size=model_size,
+        tokens_per_shard=_tokens_per_shard(mesh, batch),
+        d_model=cfg.d_model, dtype=cfg.dtype)
+    return cfg.replace(moe=moe_cfg)
 
 
 def _cached(key: tuple, make: Callable[[], Callable]) -> Callable:
@@ -211,7 +231,16 @@ def build_decode(cfg: ModelConfig, mesh=None, *, batch: Optional[int] = None,
     ``(params, token(B,1), caches, step_index=0) -> (logits, caches)``;
     ``step_index`` feeds the host-side ``serve.decode_row`` fault site
     (one seeded logit element poisoned when the ambient plan fires —
-    containment is the scheduler's job, delivery is the builder's)."""
+    containment is the scheduler's job, delivery is the builder's).
+
+    ``"auto"`` MoE knobs resolve here, at step-BUILD time, when the
+    decode batch is known (:func:`resolve_decode_config`) — the RESOLVED
+    config is the cache key.  Prefill builders keep the sentinel config
+    as their key (the prompt length is not part of it); their sentinels
+    resolve at trace time inside ``sharded_moe_apply`` instead, once per
+    jit shape — same determinism, same zero-retrace property."""
+    if batch is not None:
+        cfg = resolve_decode_config(cfg, mesh, batch)
     key = ("decode", cfg, mesh, None, batch, long_context)
 
     def make():

@@ -120,6 +120,46 @@ def test_known_bad_overlap_chunk_count(mesh_ep4):
     assert "(4, 8, 32)" in payload_f.message   # (M, B/P, d) window
 
 
+def test_known_bad_tuned_plan_consistency(mesh_ep4):
+    """A flat/P=1 graph linted against an ``"auto"``-knob contract: the
+    tuner resolves hierarchical (stages=2) for this tiny cell, so the
+    traced graph misses on both the equation count (3 vs 5) and the
+    payload-window count — "auto" silently changed a traced graph shape,
+    the exact drift the rule exists to catch."""
+    import dataclasses
+    concrete = MoEConfig(num_experts=8, dispatch="grouped", gate="topk",
+                         top_k=2, capacity_factor=8.0, a2a="flat",
+                         overlap_chunks=1)
+    auto = dataclasses.replace(concrete, a2a="auto", overlap_chunks="auto",
+                               grouped_block_m="auto",
+                               grouped_ep_bound_factor="auto")
+    p = moe.init_moe_params(RNG, concrete, 32, 64, 8, act="swiglu",
+                            dtype=jnp.float32)
+    x = jax.random.normal(RNG, (4, 16, 32))
+    ctx = {"cfg": auto, "model_size": 4, "tokens_per_shard": 16,
+           "d_model": 32, "direction": "fwd"}
+    g = analysis.trace_graph(
+        lambda p_, v: moe.sharded_moe_apply(mesh_ep4, concrete, p_, v,
+                                            num_experts=8, act="swiglu"),
+        p, x, context=ctx)
+    findings = analysis.run_rule("tuned-plan-consistency", g)
+    assert len(findings) == 2, findings
+    count_f, payload_f = findings
+    assert "a2a='hierarchical'" in count_f.message
+    assert "expects 5 all_to_all equations, traced 3" in count_f.message
+    assert payload_f.level == "error"
+    # positive control: the graph traced from the SAME auto config is
+    # consistent with the plan the rule resolves
+    g_auto = analysis.trace_graph(
+        lambda p_, v: moe.sharded_moe_apply(mesh_ep4, auto, p_, v,
+                                            num_experts=8, act="swiglu"),
+        p, x, context=ctx)
+    assert analysis.run_rule("tuned-plan-consistency", g_auto) == []
+    # concrete-config cells stay owned by overlap-chunk-count
+    g.context["cfg"] = concrete
+    assert analysis.run_rule("tuned-plan-consistency", g) == []
+
+
 def test_known_bad_no_recompute_backward():
     """Differentiating raw ``lax.ragged_dot`` re-runs it in the VJP —
     the exact recompute the custom_vjp kernels exist to avoid."""
@@ -304,7 +344,12 @@ def test_matrix_covers_the_contracted_shapes():
     assert len(cells) == len(set(cells))
     for want in ("sort/r1/flat/P1", "grouped/ep4/hier/P4",
                  "grouped/ep2tp2/flat/P2", "grouped/tp2/flat/P4",
-                 "decode/ep4/grouped/P1"):
+                 "decode/ep4/grouped/P1",
+                 # PR 9: every mesh gets an all-knobs-"auto" cell, plus
+                 # the auto decode cell (step-BUILD-time resolution)
+                 "grouped/r1/auto/Pauto", "grouped/ep4/auto/Pauto",
+                 "grouped/tp2/auto/Pauto", "grouped/ep2tp2/auto/Pauto",
+                 "decode/ep4/grouped/Pauto"):
         assert want in cells
     # hier cells only exist where a model axis exists to factorize
     assert not any("/r1/hier/" in c or "/tp2/hier/" in c for c in cells)

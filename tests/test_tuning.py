@@ -1,0 +1,293 @@
+"""Auto-tuned dispatch plans (``core/tuning.py``).
+
+Covers the PR 9 contract: the resolver is a deterministic pure
+function of ``(cfg, mesh factoring, static token count, dtype,
+fabric)``; its a2a decision follows the α–β cost model (hierarchical
+wins the small/medium-payload regime — the paper's message-aggregation
+win — and the flat/hierarchical crossover payload grows with the slow
+link's latency); every ``overlap_chunks`` it emits divides the grouped
+segment bound; calibration round-trips through ``TUNE_moe.json`` with
+a corrupt-file fallback to the static table; the shipped MoE presets'
+``"auto"`` knobs resolve to configs the validators accept on the
+meshes their docstrings claim; and serving with ``"auto"`` knobs hits
+the compiled-step cache exactly as often as explicit ints
+(``engine.trace_counts``), with validator errors naming the RESOLVED
+values.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import capacity, moe, tuning
+from repro.core.alltoall import FABRICS, LinkSpec
+from repro.core.config import AUTO, MoEConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as T
+from repro.serving import engine, generate
+
+RNG = jax.random.PRNGKey(9)
+
+
+@pytest.fixture(autouse=True)
+def _restore_tuning_state():
+    """Every test runs against (and restores) the process defaults —
+    the tuner's mode/fabric are process globals set by the launchers."""
+    prev = tuning.get_tuning()
+    yield
+    tuning.set_tuning(mode=prev[0], fabric=prev[1])
+    tuning.clear_plan_cache()
+
+
+def _auto_cfg(**kw):
+    kw.setdefault("num_experts", 16)
+    kw.setdefault("gate", "switch")
+    kw.setdefault("capacity_factor", 1.25)
+    kw.setdefault("dispatch", "grouped")
+    return MoEConfig(a2a="auto", overlap_chunks="auto",
+                     grouped_block_m="auto",
+                     grouped_ep_bound_factor="auto", **kw)
+
+
+# ---------------------------------------------------------------------------
+# the resolver: determinism + the cost-model decision surface
+# ---------------------------------------------------------------------------
+
+def test_resolver_is_deterministic():
+    cfg = _auto_cfg()
+    kw = dict(model_size=4, tokens_per_shard=128, d_model=256,
+              dtype="float32", fabric="ici_dcn")
+    p1 = tuning.resolve_plan(cfg, **kw)
+    p2 = tuning.resolve_plan(cfg, **kw)
+    assert p1 is p2                       # cached cell
+    tuning.clear_plan_cache()
+    p3 = tuning.resolve_plan(cfg, **kw)   # recomputed from scratch
+    assert p1 == p3
+
+
+def test_explicit_config_is_passed_through_unchanged():
+    cfg = MoEConfig(num_experts=16, gate="switch", capacity_factor=1.25,
+                    dispatch="grouped", a2a="flat", overlap_chunks=2)
+    assert not tuning.has_auto_knobs(cfg)
+    out = tuning.resolve_moe_config(cfg, model_size=4, tokens_per_shard=64,
+                                    d_model=128)
+    assert out is cfg                     # same object, not a copy
+
+
+def test_small_payload_resolves_hierarchical_large_resolves_flat():
+    """The model's decision surface (paper Fig. 7): message aggregation
+    wins while per-message latency dominates; at large payloads the
+    hierarchical path's extra fast-dim hop loses to flat."""
+    small = tuning.resolve_plan(_auto_cfg(), model_size=4,
+                                tokens_per_shard=16, d_model=32,
+                                dtype="float32", fabric="ici_dcn")
+    assert small.a2a == "hierarchical" and small.a2a_inner == 2
+    large = tuning.resolve_plan(_auto_cfg(), model_size=4,
+                                tokens_per_shard=4096, d_model=4096,
+                                dtype="float32", fabric="ici_dcn")
+    assert large.a2a == "flat" and large.a2a_inner == 1
+    assert large.payload_bytes > small.payload_bytes
+
+
+def _flat_crossover_T(slow_alpha: float) -> int:
+    """Smallest tokens_per_shard (powers of two) where the resolver
+    switches to flat under a slow link with the given latency."""
+    fab = ("synthetic", (LinkSpec(1e-6, 1.0 / 50e9),
+                        LinkSpec(slow_alpha, 1.0 / 6.25e9)))
+    for exp in range(4, 18):
+        plan = tuning.resolve_plan(_auto_cfg(), model_size=4,
+                                   tokens_per_shard=2 ** exp, d_model=128,
+                                   dtype="float32", fabric=fab)
+        if plan.a2a == "flat":
+            return 2 ** exp
+    return 2 ** 18
+
+
+def test_crossover_payload_grows_with_slow_link_latency():
+    """Monotone crossover: the laggier the inter-node link, the longer
+    hierarchical aggregation keeps winning (B* ∝ slow.alpha)."""
+    thresholds = [_flat_crossover_T(a) for a in (1e-6, 1e-5, 1e-4)]
+    assert thresholds == sorted(thresholds)
+    assert thresholds[0] < thresholds[-1]
+
+
+@pytest.mark.parametrize("T", [16, 100, 512, 4096])
+@pytest.mark.parametrize("M", [2, 4, 8])
+def test_resolved_overlap_always_divides_the_segment_bound(T, M):
+    cfg = tuning.resolve_moe_config(_auto_cfg(), model_size=M,
+                                    tokens_per_shard=T, d_model=256,
+                                    dtype="float32")
+    assert not tuning.has_auto_knobs(cfg)
+    B = capacity.grouped_segment_bound(cfg, T, M)
+    # grouped_overlap_chunk_bound raises when P ∤ B — it must not
+    assert capacity.grouped_overlap_chunk_bound(cfg, B) * \
+        cfg.overlap_chunks == B
+    moe.validate_dispatch_config(cfg, model_size=M, tokens_per_shard=T)
+
+
+# ---------------------------------------------------------------------------
+# calibration: fit + TUNE_moe.json round-trip + corrupt-file fallback
+# ---------------------------------------------------------------------------
+
+def test_fit_alpha_beta_recovers_synthetic_link():
+    alpha, beta = 2e-5, 1.0 / 8e9
+    pts = [(b, alpha + beta * b) for b in (1e3, 1e5, 1e7, 1e9)]
+    spec = tuning.fit_alpha_beta(pts)
+    assert spec.alpha == pytest.approx(alpha, rel=1e-6)
+    assert spec.beta == pytest.approx(beta, rel=1e-6)
+    with pytest.raises(ValueError, match=">= 2"):
+        tuning.fit_alpha_beta([(1e3, 1e-4)])
+
+
+def test_calibration_round_trips_through_tune_json(tmp_path):
+    path = tmp_path / "TUNE_moe.json"
+    fast, slow = LinkSpec(3e-6, 1 / 40e9), LinkSpec(7e-5, 1 / 5e9)
+    tuning.save_calibration(path, fast, slow)
+    loaded = tuning.load_calibration(path)
+    assert loaded is not None
+    name, (lf, ls) = loaded
+    assert name == "calibrated" and lf == fast and ls == slow
+    # the persisted pair actually steers resolution
+    plan = tuning.resolve_plan(_auto_cfg(), model_size=4,
+                               tokens_per_shard=64, d_model=64,
+                               dtype="float32", fabric=loaded)
+    assert plan.fabric == "calibrated"
+
+
+def test_corrupt_tune_json_falls_back_to_static_table(tmp_path):
+    path = tmp_path / "TUNE_moe.json"
+    path.write_text("{not json")
+    assert tuning.load_calibration(path) is None
+    path.write_text(json.dumps({"schema": "wrong/v0"}))
+    assert tuning.load_calibration(path) is None
+    assert tuning.load_calibration(tmp_path / "missing.json") is None
+    # calibrate_fabric without a usable mesh persists the static default
+    name, pair = tuning.calibrate_fabric(None, path=path)
+    assert tuning.load_calibration(path) is not None
+    assert pair[0].alpha > 0 and pair[1].alpha > 0
+
+
+def test_configure_cli_modes():
+    mode, fab = tuning.configure("off", "pcie_eth100")
+    assert (mode, fab) == ("off", "pcie_eth100")
+    # "off" pins the static defaults: resolution keeps flat/P1
+    plan = tuning.resolve_plan(_auto_cfg(), model_size=4,
+                               tokens_per_shard=16, d_model=32)
+    assert plan.a2a == "flat" and plan.overlap_chunks == 1
+    mode, fab = tuning.configure("auto", "ici_dcn")
+    assert (mode, fab) == ("auto", "ici_dcn")
+    with pytest.raises(ValueError, match="--tune"):
+        tuning.configure("fastest")
+
+
+def test_parse_fabric_names_and_rejects_unknown():
+    name, (fast, slow) = mesh_lib.parse_fabric(" ICI_DCN ")
+    assert name == "ici_dcn"
+    assert (fast, slow) == FABRICS["ici_dcn"]
+    assert fast.alpha < slow.alpha        # fast dim really is faster
+    with pytest.raises(ValueError) as e:
+        mesh_lib.parse_fabric("nvlink")
+    for valid in FABRICS:                 # error lists the valid fabrics
+        assert valid in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# the shipped presets' "auto" knobs resolve on their documented meshes
+# ---------------------------------------------------------------------------
+
+# preset → model-axis sizes its docstring/production mesh implies:
+# dbrx "1 expert per model-rank on the 16-wide model axis"; llama4 is
+# the PRIMARY production target (16-wide model axis, launch/mesh.py);
+# hetumoe-paper-16e reproduces the paper's N×8-GPU figures (G=8) and
+# also runs the production 16-way axis.
+PRESET_MESHES = {
+    "hetumoe-paper-16e": (8, 16),
+    "dbrx-132b": (16,),
+    "llama4-maverick-400b-a17b": (16,),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PRESET_MESHES))
+def test_preset_auto_knobs_resolve_and_validate(name):
+    cfg = configs.get_config(name)
+    assert tuning.has_auto_knobs(cfg.moe)
+    for M in PRESET_MESHES[name]:
+        for dispatch in ("sort", "grouped"):
+            for Tps in (64, 1024):
+                mcfg = dataclasses.replace(cfg.moe, dispatch=dispatch)
+                r = tuning.resolve_moe_config(
+                    mcfg, model_size=M, tokens_per_shard=Tps,
+                    d_model=cfg.d_model, dtype=cfg.dtype)
+                assert not tuning.has_auto_knobs(r)
+                # the resolver only emits combos the validator accepts
+                moe.validate_dispatch_config(r, model_size=M,
+                                             tokens_per_shard=Tps)
+                if r.a2a == "hierarchical":
+                    assert M % r.a2a_inner == 0
+
+
+# ---------------------------------------------------------------------------
+# serving: "auto" knobs must not cost a single extra retrace
+# ---------------------------------------------------------------------------
+
+def _trace_key_count(cfg, params, prompt, mesh):
+    engine.clear_step_cache()
+    a = generate(params, cfg, prompt, steps=4, mesh=mesh,
+                 dispatch="grouped")
+    first = dict(engine.trace_counts)
+    assert first and all(v == 1 for v in first.values()), first
+    b = generate(params, cfg, prompt, steps=4, mesh=mesh,
+                 dispatch="grouped")
+    assert dict(engine.trace_counts) == first, \
+        "second identical generate() retraced under 'auto' knobs"
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    return len(first)
+
+
+def test_auto_knobs_hit_step_cache_like_explicit_ints(mesh_ep4):
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    assert tuning.has_auto_knobs(cfg.moe)   # presets ship "auto" now
+    explicit = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, a2a="flat", a2a_inner=1, overlap_chunks=1,
+        grouped_block_m=None, grouped_ep_bound_factor=None))
+    params = T.init_model(RNG, cfg)
+    prompt = jax.random.randint(RNG, (2, 6), 0, cfg.vocab_size)
+    n_auto = _trace_key_count(cfg, params, prompt, mesh_ep4)
+    n_explicit = _trace_key_count(explicit, params, prompt, mesh_ep4)
+    assert n_auto == n_explicit
+
+
+def test_validate_decode_error_names_resolved_values(mesh_ep4):
+    """P=3 cannot divide the (resolved) bound at this decode batch; the
+    error must name the RESOLVED knobs, not the 'auto' sentinels."""
+    cfg = configs.smoke_config("dbrx-132b")
+    bad = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, dispatch="grouped", overlap_chunks=3))
+    assert tuning.has_auto_knobs(bad.moe)   # a2a/block_m/factor still auto
+    with pytest.raises(ValueError, match="auto-tuned: resolved"):
+        engine.validate_decode_config(bad, mesh_ep4, 4)
+
+
+def test_build_decode_keys_on_the_resolved_config(mesh_ep4):
+    cfg = configs.smoke_config("dbrx-132b").replace(dtype="float32")
+    cfg = engine.serve_config(cfg, dispatch="grouped")
+    engine.clear_step_cache()
+    s1 = engine.build_decode(cfg, mesh_ep4, batch=2)
+    s2 = engine.build_decode(cfg, mesh_ep4, batch=2)
+    assert s1 is s2                          # sentinel cfg, one resolved key
+    resolved = engine.resolve_decode_config(cfg, mesh_ep4, 2)
+    assert not tuning.has_auto_knobs(resolved.moe)
+    s3 = engine.build_decode(resolved, mesh_ep4, batch=2)
+    assert s1 is s3                          # resolved cfg IS the cache key
+
+
+def test_auto_sentinel_accepted_by_config_validation():
+    cfg = _auto_cfg()
+    assert cfg.a2a == AUTO
+    with pytest.raises(ValueError):
+        MoEConfig(num_experts=8, a2a="fastest")
+    with pytest.raises(ValueError):
+        MoEConfig(num_experts=8, overlap_chunks="turbo")
