@@ -12,6 +12,9 @@ Entries (suite ``decode``):
 * ``decode/step/ep/{sort,grouped}`` — the same step on the
   (data=2, model=4) serving mesh: grouped-EP AllToAll × expert-TP
   against the capacity-padded exchange;
+* ``decode/step/ep/grouped_int8`` — that grouped-EP step over the
+  int8 exchange wire (PR 10; ``int8_vs_bf16`` bounds the quant/dequant
+  overhead on this CPU container);
 * ``decode/ar/grouped`` — a {GEN}-step autoregressive loop: AR
   tokens/sec and per-device GB/s (params + cache traffic per step —
   the decode roofline quantity).
@@ -65,7 +68,8 @@ def run(paper: bool = False):
              prefill_tokens_per_s=BATCH * L / us * 1e6)
 
     # -- one decode step: sort vs grouped -----------------------------------
-    def step_entry(name, scfg, step_mesh, ratio_vs=None):
+    def step_entry(name, scfg, step_mesh, ratio_vs=None,
+                   ratio_key="grouped_vs_sort"):
         prefill = engine.build_prefill(scfg, step_mesh, cache_len=cache_len,
                                        batch=BATCH)
         prompt = jax.random.randint(rng, (BATCH, lens[0]), 0, cfg.vocab_size)
@@ -77,7 +81,7 @@ def run(paper: bool = False):
         gbps = (_bytes(params) + _bytes(caches)) / (us * 1e-6) / 1e9 / n_dev
         ratios = dict(tokens_per_s=BATCH / us * 1e6, gbps_per_device=gbps)
         if ratio_vs:
-            ratios["grouped_vs_sort"] = ratio_vs / us
+            ratios[ratio_key] = ratio_vs / us
         emit(name, us, f"{BATCH / us * 1e6:.0f} tok/s, "
              f"{gbps:.2f} GB/s/dev", **ratios)
         return us, tok, caches, step
@@ -92,7 +96,15 @@ def run(paper: bool = False):
     ep_sort_us, *_ = step_entry("decode/step/ep/sort",
                                 engine.serve_config(cfg, dispatch="sort"),
                                 mesh_ep)
-    step_entry("decode/step/ep/grouped", gcfg, mesh_ep, ratio_vs=ep_sort_us)
+    ep_grouped_us, *_ = step_entry("decode/step/ep/grouped", gcfg, mesh_ep,
+                                   ratio_vs=ep_sort_us)
+    # PR 10: the same EP step over the int8 exchange wire — decode steps
+    # are latency-bound, exactly where the α–β model says the 1-byte
+    # payload pays; on CPU the ratio bounds the quant/dequant overhead
+    step_entry("decode/step/ep/grouped_int8",
+               engine.serve_config(cfg, dispatch="grouped",
+                                   payload_dtype="int8"),
+               mesh_ep, ratio_vs=ep_grouped_us, ratio_key="int8_vs_bf16")
 
     # -- autoregressive loop: tokens/sec + per-device GB/s ------------------
     def ar(params, tok, caches):

@@ -26,6 +26,12 @@ f dim sharded over ``data`` — the ragged-aware TP all-gather /
 psum_scatter pair around the grouped matmuls vs the fixed-shape
 sort-TP pair, across the same a2a matrix.
 
+``run_quant`` (the ``grouped/quant/*`` entries) times the bf16
+grouped-EP layer against the int8 / float8_e4m3fn exchange wire
+(PR 10): the measured ratios bound the quantize/dequantize overhead on
+this CPU container, the emitted predicted α–β saving is the fabric
+deliverable the ``payload_dtype="auto"`` policy thresholds on.
+
 ``run_overlap`` (the ``grouped_overlap`` suite, ``grouped/overlap/*``
 entries) sweeps the overlapped pipeline's chunk count P ∈ {1, 2, 4}
 over both a2a modes on the EP mesh — the CPU numbers bound the
@@ -94,16 +100,19 @@ def run(paper: bool = False):
 
     run_ep(paper=paper)
     run_tp(paper=paper)
+    run_quant(paper=paper)
 
 
 TP_MESH = (2, 4)        # (data=TP, model=EP) — data carries the f slices
 
 
-def _sharded_setup(mesh_shape, mesh_axes, tp_axis, key_tag, paper: bool):
+def _sharded_setup(mesh_shape, mesh_axes, tp_axis, key_tag, paper: bool,
+                   dtype=jnp.float32):
     """Shared setup for the sharded grouped suites (``run_ep``/``run_tp``
-    /``run_overlap``): the smoke mesh, a switch-routed token batch,
-    f32 expert params, and a cfg → jitted-layer factory.  Returns None
-    (after printing why) when the backend has too few devices."""
+    /``run_overlap``/``run_quant``): the smoke mesh, a switch-routed
+    token batch, expert params at ``dtype``, and a cfg → jitted-layer
+    factory.  Returns None (after printing why) when the backend has
+    too few devices."""
     import numpy as np
     n_dev = int(np.prod(mesh_shape))
     if len(jax.devices()) < n_dev:
@@ -121,10 +130,10 @@ def _sharded_setup(mesh_shape, mesh_axes, tp_axis, key_tag, paper: bool):
     d, d_ff, E = (512, 512, 16) if paper else (128, 128, 16)
     S = 2048 if paper else 512
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (S, d), jnp.float32)
+    x = jax.random.normal(key, (S, d), dtype)
     base = MoEConfig(num_experts=E, gate="switch", capacity_factor=1.25)
     params = moe.init_moe_params(key, base, d, d_ff, E, act="relu",
-                                 dtype=jnp.float32)
+                                 dtype=dtype)
 
     def layer_fn(cfg):
         @jax.jit
@@ -188,6 +197,55 @@ def run_tp(paper: bool = False):
     FLOPs back — see core/layout.py's cost model)."""
     _run_sharded_matrix(TP_MESH, ("data", "model"), "data",
                         "tp", f"tp{TP_MESH[0]}xep{TP_MESH[1]}", paper)
+
+
+QUANT_WIRES = ("int8", "float8_e4m3fn")
+
+
+def run_quant(paper: bool = False):
+    """Quantized exchange wire (PR 10): the full bf16 grouped-EP layer
+    with the payload AllToAlls at bf16 vs int8 vs float8_e4m3fn
+    (per-chunk scales, f32-accumulating matmuls either side).
+
+    On this CPU container the collectives are emulated, so the measured
+    ``vs_bf16`` ratios bound the quantize/dequantize arithmetic overhead
+    (it must stay ~1.0×); the fabric-level deliverable is the PREDICTED
+    α–β saving of the 1-byte wire on the ici_dcn fabric, emitted
+    alongside — the same quantity ``payload_dtype="auto"`` thresholds on
+    (``tuning.QUANT_MIN_SAVING``)."""
+    from repro.core import tuning
+
+    setup = _sharded_setup((EP_WAYS,), ("model",), None, "quant", paper,
+                           dtype=jnp.bfloat16)
+    if setup is None:
+        return
+    layer_fn, params, x, E, S = setup
+    T = x.shape[0] // EP_WAYS
+
+    def cfg_for(wire):
+        return MoEConfig(num_experts=E, gate="switch", capacity_factor=1.25,
+                         dispatch="grouped", payload_dtype=wire)
+
+    prev = tuning.set_tuning(mode="auto", fabric="ici_dcn")
+    try:
+        plans = {w: tuning.resolve_plan(
+            cfg_for(w), model_size=EP_WAYS, tokens_per_shard=T,
+            d_model=x.shape[-1], dtype=x.dtype) for w in (None,) + QUANT_WIRES}
+    finally:
+        tuning.set_tuning(mode=prev[0], fabric=prev[1])
+
+    t_full = timeit(layer_fn(cfg_for(None)), params, x)
+    emit(f"grouped/quant/bf16/S{S}", t_full,
+         f"full-width wire ({plans[None].payload_bytes / 1e3:.0f}KB)")
+    for wire in QUANT_WIRES:
+        us = timeit(layer_fn(cfg_for(wire)), params, x)
+        saving = (1.0 - plans[wire].cost_flat / plans[None].cost_flat
+                  if plans[None].cost_flat else 0.0)
+        emit(f"grouped/quant/{wire}/S{S}", us,
+             f"1-byte wire ({plans[wire].payload_bytes / 1e3:.0f}KB); "
+             f"vs_bf16={t_full / us:.2f}x; "
+             f"predicted a2a saving={saving:.0%} (ici_dcn)",
+             vs_bf16=t_full / us, predicted_saving=saving)
 
 
 OVERLAP_SWEEP = (1, 2, 4)

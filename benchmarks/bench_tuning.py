@@ -12,12 +12,16 @@ happens once per trace, never per step) while the predicted column is
 the fabric-level deliverable the tuner actually optimizes.
 
 Cells: grouped-EP (4-way model mesh), grouped-TP ((2,4) data×model
-mesh), and the overlap-pipeline cell (hand-set P=2 vs the resolved P)
-— the same meshes as the ``grouped``/``grouped_overlap`` suites, so
-the numbers are directly comparable.  Tracked under ``run.py --check``
-like every grouped suite.
+mesh), the overlap-pipeline cell (hand-set P=2 vs the resolved P), and
+the payload cell (PR 10: full-width bf16 wire vs
+``payload_dtype="auto"`` — predicted α–β saving of the resolved wire
+vs the measured ratio) — the same meshes as the
+``grouped``/``grouped_overlap`` suites, so the numbers are directly
+comparable.  Tracked under ``run.py --check`` like every grouped suite.
 """
 import dataclasses
+
+import jax.numpy as jnp
 
 from benchmarks.bench_grouped import EP_WAYS, TP_MESH, _sharded_setup
 from benchmarks.common import emit, timeit
@@ -62,6 +66,59 @@ def _cell(key_tag: str, hand: MoEConfig, *, model_size: int,
          predicted_overlap=pred_overlap)
 
 
+def _payload_cell(hand: MoEConfig, *, paper: bool) -> None:
+    """PR 10 predicted-vs-measured payload cell: the bf16 grouped-EP
+    layer with the hand-set full-width wire vs ``payload_dtype="auto"``
+    (everything else identical), plus the α–β model's predicted flat-a2a
+    speedup of the resolved wire for the same cell.
+
+    The cell is deliberately β-DOMINATED — 4× the tokens and 2× the
+    width of the other tuning cells — because at the shared smoke dims
+    the per-hop latency dominates and the auto policy (correctly) stays
+    lossless (``QUANT_MIN_SAVING``); the whole point of this cell is to
+    watch the resolver flip to int8 where the payload is the cost."""
+    import jax
+
+    if len(jax.devices()) < EP_WAYS:
+        print(f"# WARNING: tuning/payload SKIPPED — "
+              f"{len(jax.devices())} device(s) < {EP_WAYS}")
+        return
+    from repro.core import moe
+    from repro.launch.mesh import make_smoke_mesh
+    mesh = make_smoke_mesh((EP_WAYS,), ("model",))
+    d, d_ff, E = (1024, 512, 16) if paper else (256, 128, 16)
+    S = 4096 if paper else 2048
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (S, d), jnp.bfloat16)
+    params = moe.init_moe_params(key, hand, d, d_ff, E, act="relu",
+                                 dtype=jnp.bfloat16)
+
+    def layer_fn(cfg):
+        @jax.jit
+        def fn(p, v):
+            y, _, _ = moe.sharded_moe_apply(mesh, cfg, p, v,
+                                            num_experts=E, act="relu")
+            return y
+        return fn
+
+    auto = dataclasses.replace(hand, payload_dtype="auto")
+    resolve = lambda c: tuning.resolve_plan(
+        c, model_size=EP_WAYS, tokens_per_shard=S // EP_WAYS,
+        d_model=d, dtype=x.dtype)
+    full, plan = resolve(hand), resolve(auto)
+    t_hand = timeit(layer_fn(hand), params, x)
+    t_auto = timeit(layer_fn(auto), params, x)
+    pred = full.cost_flat / plan.cost_flat if plan.cost_flat else 1.0
+    emit(f"tuning/payload/hand/S{S}", t_hand,
+         f"full-width bf16 wire ({full.payload_bytes / 1e3:.0f}KB)")
+    emit(f"tuning/payload/auto/S{S}", t_auto,
+         f"resolved payload_dtype={plan.payload_dtype!r} "
+         f"({plan.payload_bytes / 1e3:.0f}KB); measured "
+         f"vs_hand={t_hand / t_auto:.2f}x; predicted "
+         f"a2a={pred:.2f}x ({plan.fabric})",
+         vs_hand=t_hand / t_auto, predicted_payload_a2a=pred)
+
+
 def run(paper: bool = False):
     prev = tuning.set_tuning(mode="auto", fabric="ici_dcn")
     try:
@@ -87,6 +144,11 @@ def run(paper: bool = False):
         _cell("overlap", overlap2, model_size=EP_WAYS,
               tokens_per_shard=S // EP_WAYS, d_model=d, paper=paper,
               mesh_shape=(EP_WAYS,), mesh_axes=("model",), tp_axis=None)
+        # payload: hand-set full-width wire vs ``payload_dtype="auto"``
+        # (PR 10) — the predicted α–β saving of the resolved wire next
+        # to the measured ratio (on CPU the latter bounds the
+        # quant/dequant overhead, ~1.0×)
+        _payload_cell(grouped, paper=paper)
     finally:
         tuning.set_tuning(mode=prev[0], fabric=prev[1])
 

@@ -9,13 +9,15 @@ Traces the standard dispatch config matrix — sort/grouped × {1-rank,
 EP4, TP2, EP2×TP2} × flat/hier × overlap P ∈ {1, 2, 4}, plus one fully
 auto-tuned cell per mesh (``grouped/<mesh>/auto/Pauto``: every grouped
 knob the ``core/tuning.py`` sentinel, checked by the
-``tuned-plan-consistency`` rule) — through
-``sharded_moe_apply`` on the 8-fake-CPU-device backend, runs every
-registered jaxpr rule over the forward graphs and (grouped cells, the
-Pallas kernel path) the gradient graphs, lints one representative cell's
-COMPILED HLO, and runs the probe rules (donation aliasing on a real
-``init_train_state``, serving retrace budget on repeated ``generate()``
-calls).  Cell names look like ``grouped/ep4/hier/P2`` and
+``tuned-plan-consistency`` rule), plus quantized-wire cells carrying a
+fifth ``/<payload_dtype>`` path component (``payload-dtype`` rule) —
+through ``sharded_moe_apply`` on the 8-fake-CPU-device backend, runs
+every registered jaxpr rule over the forward graphs and (grouped cells,
+the Pallas kernel path) the gradient graphs, lints one representative
+cell's COMPILED HLO, and runs the probe rules (donation aliasing on a
+real ``init_train_state``, serving retrace budget on repeated
+``generate()`` calls).  Cell names look like ``grouped/ep4/hier/P2``,
+``grouped/ep4/flat/P2/int8`` (quantized exchange wire) and
 ``decode/ep4/grouped/P1`` (serving step-BUILD validation cells).
 
 A config×mesh combination the validators reject (``--config`` with a
@@ -95,24 +97,38 @@ def matrix_cells() -> List[str]:
         # fully auto-tuned cell: every grouped knob a sentinel, resolved
         # by core/tuning.py — linted by tuned-plan-consistency
         cells.append(f"grouped/{mesh_key}/auto/Pauto")
+    # quantized exchange-wire cells (payload-dtype rule): int8 on the
+    # flat and overlapped EP paths + the EP×TP mesh, one fp8 witness
+    cells += ["grouped/ep4/flat/P1/int8", "grouped/ep4/flat/P2/int8",
+              "grouped/ep4/hier/P1/float8_e4m3fn",
+              "grouped/ep2tp2/flat/P2/int8"]
     # serving step-BUILD validation cells (engine.validate_decode_config)
     cells += ["decode/r1/grouped/P1", "decode/ep4/grouped/P1",
-              "decode/ep4/grouped/Pauto"]
+              "decode/ep4/grouped/Pauto", "decode/ep4/grouped/P1/int8"]
     return cells
 
 
 def parse_cell(name: str) -> Dict:
-    """``dispatch/mesh/a2a/P<n>`` or ``decode/mesh/dispatch/P<n>`` →
-    spec dict.  Unknown vocabulary raises ValueError naming the options;
-    a VALID name with an invalid config combination (P that does not
-    divide the bound) parses fine and surfaces as a config-invalid
-    finding from the validators instead."""
-    from repro.core.config import DISPATCH_MODES
+    """``dispatch/mesh/a2a/P<n>[/payload_dtype]`` or
+    ``decode/mesh/dispatch/P<n>[/payload_dtype]`` → spec dict.  Unknown
+    vocabulary raises ValueError naming the options; a VALID name with
+    an invalid config combination (P that does not divide the bound)
+    parses fine and surfaces as a config-invalid finding from the
+    validators instead."""
+    from repro.core.config import DISPATCH_MODES, PAYLOAD_DTYPES
 
     parts = name.split("/")
-    err = (f"bad lint cell {name!r}: expected dispatch/mesh/a2a/P<n> "
-           f"(dispatch in {DISPATCH_MODES}, mesh in {tuple(MESHES)}, a2a "
-           f"in {tuple(A2A)}) or decode/mesh/dispatch/P<n>")
+    err = (f"bad lint cell {name!r}: expected "
+           f"dispatch/mesh/a2a/P<n>[/payload_dtype] (dispatch in "
+           f"{DISPATCH_MODES}, mesh in {tuple(MESHES)}, a2a in "
+           f"{tuple(A2A)}, payload_dtype in {PAYLOAD_DTYPES}) or "
+           f"decode/mesh/dispatch/P<n>[/payload_dtype]")
+    payload = None
+    if len(parts) == 5:
+        payload = parts[4]
+        if payload not in PAYLOAD_DTYPES:
+            raise ValueError(err)
+        parts = parts[:4]
     if len(parts) != 4:
         raise ValueError(err)
     if parts[0] == "decode":
@@ -131,7 +147,8 @@ def parse_cell(name: str) -> Dict:
         except ValueError:
             raise ValueError(err)
     return {"name": name, "decode": parts[0] == "decode",
-            "dispatch": dispatch, "mesh": mesh_key, "a2a": a2a, "P": P}
+            "dispatch": dispatch, "mesh": mesh_key, "a2a": a2a, "P": P,
+            "payload": payload}
 
 
 def _cell_cfg(spec: Dict, *, use_pallas: bool = False):
@@ -144,7 +161,7 @@ def _cell_cfg(spec: Dict, *, use_pallas: bool = False):
     return MoEConfig(num_experts=E, dispatch=spec["dispatch"], gate="topk",
                      top_k=2, capacity_factor=8.0, a2a=a2a, a2a_inner=inner,
                      overlap_chunks=spec["P"], use_pallas_gate=use_pallas,
-                     **kw)
+                     payload_dtype=spec.get("payload"), **kw)
 
 
 def lint_cell(name: str, rules=None) -> List:
@@ -217,7 +234,8 @@ def _lint_decode_cell(spec: Dict) -> List:
     cfg = base.replace(moe=dataclasses.replace(
         base.moe, dispatch="grouped", overlap_chunks=spec["P"]))
     try:
-        cfg = engine.serve_config(cfg, dispatch=spec["dispatch"])
+        cfg = engine.serve_config(cfg, dispatch=spec["dispatch"],
+                                  payload_dtype=spec.get("payload"))
         engine.validate_decode_config(cfg, mesh, batch=4, cache_len=32)
     except ValueError as e:
         return analysis.lint_probe(config_error=str(e), label=spec["name"])

@@ -24,6 +24,13 @@ the regression it guards), expressed over the structured walkers in
                           cotangents into bf16 dots (f32 compute, 2×
                           bytes) — mixed float operand dtypes on a
                           dot-like equation mean a missing cast.
+  payload-dtype           PR 10: the grouped exchange's payload
+                          AllToAlls must move the RESOLVED wire dtype
+                          (int8/fp8 when ``payload_dtype`` is set, the
+                          compute dtype otherwise), and no quantized
+                          wire dtype may reach a dot-like equation —
+                          dequantization happens between the exchange
+                          and the matmul, never inside it.
   donation-alias          PR 6: donated ``TrainState`` leaves sharing a
                           buffer make XLA donation reject the alias.
   retrace-budget          PR 7: each serving step-builder key traces
@@ -243,8 +250,7 @@ def _overlap_chunk_count(graph: JaxprGraph) -> List:
     P = cfg.overlap_chunks
     if B % P:
         return out            # bound validation owns this failure mode
-    stages = 2 if moe_lib.expected_grouped_a2a_eqns(cfg, model_size) \
-        == P * 5 else 1
+    stages = moe_lib.grouped_a2a_stages(cfg, model_size)
     payload = _payload_sites(graph, model_size, B // P, int(d))
     want_payload = 2 * stages * P
     if len(payload) != want_payload:
@@ -303,7 +309,7 @@ def _tuned_plan_consistency(graph: JaxprGraph) -> List:
     P = rcfg.overlap_chunks
     if B % P:
         return out
-    stages = 2 if expected == P * 5 else 1
+    stages = moe_lib.grouped_a2a_stages(rcfg, model_size)
     payload = _payload_sites(graph, model_size, B // P, int(d))
     want_payload = 2 * stages * P
     if len(payload) != want_payload:
@@ -313,6 +319,75 @@ def _tuned_plan_consistency(graph: JaxprGraph) -> List:
                     f"{B // P}, {d}) windows (bound B={B}, P={P}), "
                     f"found {len(payload)} — the traced windows differ "
                     f"from the resolved plan"))
+    return out
+
+
+@register("payload-dtype", "error", ("jaxpr",))
+def _payload_dtype_rule(graph: JaxprGraph) -> List:
+    """The grouped exchange's payload AllToAll element type must match
+    the RESOLVED config: the quantized wire dtype (int8 / fp8) when
+    ``payload_dtype`` is set, the compute dtype when it is ``None`` — a
+    payload-shaped exchange at the wrong element type means the
+    quantize/dequantize pair was dropped (full-width wire, no β saving)
+    or never undone (silent low-precision compute).  When quantized, no
+    dot-like equation may consume the wire dtype directly: dequant
+    happens between the exchange and the grouped matmuls, which keep
+    accumulating in f32.  Applies to forward grouped-EP graphs traced
+    with ``cfg``/``model_size``/``tokens_per_shard``/``d_model``/
+    ``dtype`` context.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import alltoall, capacity, tuning
+
+    ctx = graph.context
+    cfg = ctx.get("cfg")
+    model_size = int(ctx.get("model_size", 1))
+    T = ctx.get("tokens_per_shard")
+    d = ctx.get("d_model")
+    if (cfg is None or cfg.dispatch != "grouped" or model_size <= 1
+            or ctx.get("direction", "fwd") != "fwd"
+            or T is None or d is None):
+        return []
+    rcfg = cfg
+    if tuning.has_auto_knobs(cfg):
+        if ctx.get("dtype") is None:
+            return []                 # cannot resolve without the dtype
+        rcfg = tuning.resolve_moe_config(
+            cfg, model_size=model_size, tokens_per_shard=int(T),
+            d_model=int(d), dtype=ctx.get("dtype"))
+    if rcfg.payload_dtype is not None:
+        wire = jnp.dtype(alltoall._payload_jnp_dtype(rcfg.payload_dtype))
+    elif ctx.get("dtype") is not None:
+        wire = jnp.dtype(ctx["dtype"])
+    else:
+        return []                     # nothing concrete to assert against
+    B = capacity.grouped_segment_bound(rcfg, int(T), model_size)
+    P = rcfg.overlap_chunks
+    if B % P:
+        return []                     # bound validation owns this cell
+    out = []
+    for site in _payload_sites(graph, model_size, B // P, int(d)):
+        got = jnp.dtype(site.out_avals[0].dtype)
+        if got != wire:
+            out.append((site.describe(),
+                        f"payload all_to_all emitted {got.name}, but the "
+                        f"resolved payload_dtype="
+                        f"{rcfg.payload_dtype!r} requires {wire.name} on "
+                        f"the wire — the quantize/dequantize pair is "
+                        f"missing or misplaced"))
+    if rcfg.payload_dtype is not None:
+        for site in graph.sites():
+            if site.primitive not in DOT_PRIMITIVES:
+                continue
+            bad = [dt for dt in site.in_dtypes if jnp.dtype(dt) == wire]
+            if bad:
+                out.append((site.describe(),
+                            f"dot-like equation consumes the "
+                            f"{wire.name} wire dtype directly — the "
+                            f"payload must be dequantized between the "
+                            f"exchange and the grouped matmul (f32 "
+                            f"accumulation)"))
     return out
 
 

@@ -31,6 +31,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.config import A2A_MODES
@@ -90,13 +91,22 @@ def all_to_all(x: jax.Array, axis_name: str, *, mode: str = "flat",
 
     An unknown ``mode`` is a config error and raises whatever ``inner``
     is — previously it silently ran flat when ``inner <= 1`` and died on
-    a bare ``assert`` otherwise.
+    a bare ``assert`` otherwise.  ``inner < 1`` is likewise a config
+    error: a typo'd ``a2a_inner=0`` (or negative) used to silently
+    disable the paper's hierarchical win by falling back to flat.
+    ``inner == 1`` remains the documented degenerate-flat case (every
+    'node' is a single rank, so the two-stage exchange IS the flat one).
     """
     if mode not in A2A_MODES:
         raise ValueError(
             f"all_to_all: unknown mode {mode!r} (MoEConfig.a2a); valid "
             f"modes: {A2A_MODES}")
-    if mode == "flat" or inner <= 1:
+    if inner < 1:
+        raise ValueError(
+            f"all_to_all: inner={inner} (MoEConfig.a2a_inner) must be "
+            f">= 1 — 1 degenerates to the flat exchange; 0 or negative "
+            f"would silently disable the hierarchical path")
+    if mode == "flat" or inner == 1:
         return flat_all_to_all(x, axis_name)
     M = x.shape[0]
     if M % inner != 0:
@@ -144,6 +154,165 @@ def grouped_all_to_all(tokens: jax.Array, counts: jax.Array,
                                  concat_axis=0, tiled=True)
     recv_tokens = all_to_all(tokens, axis_name, mode=mode, inner=inner)
     return recv_tokens, recv_counts
+
+
+# ---------------------------------------------------------------------------
+# Quantized exchange payloads (MegaScale-MoE): the dispatch/combine token
+# buffers tolerate far lower precision than compute, so the wire moves
+# int8/fp8 with one f32 amax scale per (source-rank chunk, overlap
+# window), and the receive side dequantizes into the f32-accumulating
+# grouped matmuls.  β shrinks by the itemsize ratio; the α terms and the
+# count exchange are unchanged (one extra tiny flat scales exchange in
+# the combine direction — see moe.expected_grouped_a2a_eqns).
+# ---------------------------------------------------------------------------
+
+# Largest representable magnitude per wire dtype: the amax of a chunk
+# maps onto this, so quantization saturates exactly at the chunk max.
+# int8 uses the symmetric [-127, 127] grid (−128 stays unused, keeping
+# the grid sign-symmetric); the fp8 values are jnp.finfo(dt).max.
+PAYLOAD_QMAX = {
+    "int8": 127.0,
+    "float8_e4m3fn": 448.0,
+    "float8_e5m2": 57344.0,
+}
+
+
+def _payload_jnp_dtype(payload_dtype: str):
+    if payload_dtype not in PAYLOAD_QMAX:
+        raise ValueError(
+            f"unknown payload dtype {payload_dtype!r} "
+            f"(MoEConfig.payload_dtype); valid: {sorted(PAYLOAD_QMAX)}")
+    return jnp.dtype(payload_dtype)
+
+
+def quantize_payload(x: jax.Array, payload_dtype: str):
+    """Per-chunk symmetric quantization of ``(M, …)`` payloads.
+
+    One f32 amax scale per leading-axis chunk (the per-destination-rank
+    segment of one overlap window): ``q = round(x / s)`` on the int8
+    grid, or a scaled cast for the fp8 dtypes.  Returns ``(q, scales)``
+    with ``scales`` shaped ``(M,)``; all-zero chunks get scale 1 so the
+    round trip stays exact.  Scale arithmetic is f32 regardless of the
+    compute dtype.
+    """
+    dt = _payload_jnp_dtype(payload_dtype)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=tuple(range(1, x.ndim)))
+    scales = jnp.where(amax > 0, amax / PAYLOAD_QMAX[payload_dtype], 1.0)
+    y = xf / scales.reshape(scales.shape + (1,) * (x.ndim - 1))
+    if payload_dtype == "int8":
+        q = jnp.clip(jnp.round(y), -127.0, 127.0).astype(dt)
+    else:
+        q = y.astype(dt)
+    return q, scales
+
+
+def dequantize_payload(q: jax.Array, scales: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`quantize_payload`: widen to f32, apply the
+    per-chunk scale, then cast to ``dtype`` in one place — the cast
+    form the ``dtype-leak`` lint rule expects (never hand a dot a wire-
+    dtype operand)."""
+    s = scales.reshape(scales.shape + (1,) * (q.ndim - 1))
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def quantized_grouped_all_to_all(tokens: jax.Array,
+                                 counts: Optional[jax.Array],
+                                 axis_name: str, *, mode: str = "flat",
+                                 inner: int = 1, payload_dtype: str):
+    """Quantized variant of :func:`grouped_all_to_all`.
+
+    The ``(M, B, d)`` token window is quantized per source chunk and
+    crosses the mesh at ``payload_dtype``; the per-chunk f32 scales ride
+    ALONGSIDE the count matrix — bitcast to an extra int32 column of the
+    (already flat) counts exchange, so the dispatch direction emits
+    exactly the same number of collectives as the unquantized path.
+    With ``counts=None`` (the combine direction, which has no count
+    matrix) the scales go over their own tiny flat exchange instead.
+
+    Returns source-major ``(recv_tokens, recv_counts, recv_scales)``
+    with ``recv_tokens`` still at the wire dtype — the caller (normally
+    :func:`quantized_exchange`) dequantizes with ``recv_scales``.
+    """
+    q, scales = quantize_payload(tokens, payload_dtype)
+    if counts is not None:
+        packed = jnp.concatenate(
+            [counts.astype(jnp.int32),
+             lax.bitcast_convert_type(scales, jnp.int32)[:, None]], axis=1)
+        r = lax.all_to_all(packed, axis_name, split_axis=0, concat_axis=0,
+                           tiled=True)
+        recv_counts = r[:, :-1].astype(counts.dtype)
+        recv_scales = lax.bitcast_convert_type(r[:, -1], jnp.float32)
+    else:
+        recv_counts = None
+        recv_scales = lax.all_to_all(scales, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=True)
+    recv_tokens = all_to_all(q, axis_name, mode=mode, inner=inner)
+    return recv_tokens, recv_counts, recv_scales
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _quantized_exchange(tokens, counts, axis_name, mode, inner,
+                        payload_dtype, out_dtype):
+    rq, rcounts, rscales = quantized_grouped_all_to_all(
+        tokens, counts, axis_name, mode=mode, inner=inner,
+        payload_dtype=payload_dtype)
+    recv = dequantize_payload(rq, rscales,
+                              tokens.dtype if out_dtype is None else out_dtype)
+    return recv, rcounts
+
+
+def _quantized_exchange_fwd(tokens, counts, axis_name, mode, inner,
+                            payload_dtype, out_dtype):
+    out = _quantized_exchange(tokens, counts, axis_name, mode, inner,
+                              payload_dtype, out_dtype)
+    # residuals: a zero-size dtype carrier for the cotangent's cast, and
+    # the count matrix's shape for its float0 cotangent — NOT the
+    # forward activations, so the backward dequantizes off nothing but
+    # the cotangent itself (no recompute).
+    return out, (jnp.zeros((0,), tokens.dtype), counts)
+
+
+def _quantized_exchange_bwd(axis_name, mode, inner, payload_dtype,
+                            out_dtype, res, cts):
+    proto, counts = res
+    g, _ = cts
+    # The chunk permutation of all_to_all(split=concat=0) is an
+    # involution, so the transpose is the same exchange — with the
+    # cotangent payload quantized the same way (MegaScale-MoE: gradient
+    # payloads tolerate low precision too).  Scales are treated as
+    # constants of the forward (straight-through), so no activation
+    # residuals are needed.
+    gq, gscales = quantize_payload(g, payload_dtype)
+    rgq = all_to_all(gq, axis_name, mode=mode, inner=inner)
+    rgs = lax.all_to_all(gscales, axis_name, split_axis=0, concat_axis=0,
+                         tiled=True)
+    gx = dequantize_payload(rgq, rgs, proto.dtype)
+    if counts is None:
+        return gx, None
+    return gx, np.zeros(counts.shape, jax.dtypes.float0)
+
+
+_quantized_exchange.defvjp(_quantized_exchange_fwd, _quantized_exchange_bwd)
+
+
+def quantized_exchange(tokens: jax.Array, counts: Optional[jax.Array],
+                       axis_name: str, *, mode: str = "flat",
+                       inner: int = 1, payload_dtype: str,
+                       out_dtype=None):
+    """Differentiable quantize → AllToAll → dequantize round trip.
+
+    Forward: :func:`quantized_grouped_all_to_all` then
+    :func:`dequantize_payload` into ``out_dtype`` (default
+    ``tokens.dtype``; the combine direction passes f32 so the combine
+    reduction stays f32).  Backward (``custom_vjp``): the SAME quantized
+    exchange applied to the cotangent — the wire stays low-precision in
+    both directions, scales are straight-through constants, and nothing
+    of the forward is recomputed.  Returns ``(recv, recv_counts)``;
+    ``recv_counts`` is ``None`` when ``counts`` is.
+    """
+    return _quantized_exchange(tokens, counts, axis_name, mode, inner,
+                               payload_dtype, out_dtype)
 
 
 # ---------------------------------------------------------------------------

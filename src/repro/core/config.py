@@ -35,6 +35,14 @@ GATE_STRATEGIES = (
 AUTO = "auto"
 
 A2A_MODES = ("flat", "hierarchical")
+
+# Wire dtypes the grouped AllToAll payload may be quantized to
+# (MegaScale-MoE: dispatch/combine payloads tolerate far lower precision
+# than compute).  Per-(source-chunk, window) amax scales travel alongside
+# the count matrices (core/alltoall.py quantize_payload /
+# quantized_grouped_all_to_all); the grouped matmuls still accumulate in
+# f32 off the dequantized rows.
+PAYLOAD_DTYPES = ("int8", "float8_e4m3fn", "float8_e5m2")
 # sort    = HetuMoE layout-transform into the capacity-padded (E·C, d) buffer
 # dense   = one-hot einsum baseline (GShard/DeepSpeed)
 # grouped = dropless: expert-sorted (S·K, d) buffer + ragged/grouped expert
@@ -106,6 +114,20 @@ class MoEConfig:
     # (including ones the tuner would never pick — bound divisibility is
     # still validated, with the usual ValueError).
     overlap_chunks: int = 1
+    # Wire dtype for the grouped exchange payloads (dispatch AND combine
+    # directions).  None → the payload crosses the mesh at the compute
+    # dtype (today's behavior, bitwise identical graphs).  A PAYLOAD_DTYPES
+    # member quantizes each (source-chunk, overlap-window) payload with a
+    # per-chunk amax scale before the AllToAll and dequantizes on the
+    # receive side into the f32-accumulating grouped matmuls; the combine
+    # reduction stays in f32 (core/alltoall.py, core/moe.py).  "auto" →
+    # the α–β cost model picks the cheapest tolerance-safe wire dtype per
+    # cell (core/tuning.py: int8 when the predicted payload-β saving
+    # clears QUANT_MIN_SAVING, else None — see resolve_plan's policy
+    # note).  Grouped dispatch only; a no-op when the exchange never
+    # crosses ranks (model_size == 1).  Explicit values are honored
+    # verbatim per the PR 9 tunable-knob convention.
+    payload_dtype: Optional[str] = None
 
     def __post_init__(self):
         # real exceptions, not asserts: these must survive ``python -O``
@@ -144,6 +166,12 @@ class MoEConfig:
                 f"MoEConfig.overlap_chunks must be an int >= 1 (1 disables "
                 f"the overlapped pipeline) or {AUTO!r}, got "
                 f"{self.overlap_chunks!r}")
+        pd = self.payload_dtype
+        if pd is not None and pd != AUTO and pd not in PAYLOAD_DTYPES:
+            raise ValueError(
+                f"MoEConfig.payload_dtype={pd!r} is not a known exchange "
+                f"wire dtype; valid options: None (compute dtype), "
+                f"{PAYLOAD_DTYPES}, or {AUTO!r}")
 
 
 @dataclass(frozen=True)

@@ -75,6 +75,16 @@ M expert-parallel ranks, segment bound B):
                                               stay exposed, at P× the α
                                               message count — see
                                               ``alltoall.cost_pipelined``
+    grouped-EP  SAME maps — the per-chunk     wire bytes ÷ itemsize
+    quantized   amax scales ride the count    (bf16 → int8/fp8 halves
+    (payload    exchange as a bitcast int32   the β term); + M f32
+    dtype)      column (dispatch) or one      scales per window; dequant
+                tiny (M,) flat a2a (combine)  to the compute dtype
+                                              happens INSIDE the
+                                              exchange, so every map
+                                              above is reused unchanged
+                                              (``alltoall.quantized_
+                                              grouped_all_to_all``)
     ==========  ============================  =========================
 
 The grouped-EP exchange pads to the segment bound B instead of the
@@ -473,10 +483,18 @@ def take_rows(src: jax.Array, idx: jax.Array) -> jax.Array:
 
 def combine_grouped(expert_out: jax.Array, plan: GroupedPlan,
                     num_tokens: int) -> jax.Array:
-    """(S·K, d) expert-sorted FFN output → (S, d) weighted combine."""
-    w = plan.weight.astype(expert_out.dtype)
-    out = jnp.zeros((num_tokens, expert_out.shape[-1]), expert_out.dtype)
-    return out.at[plan.token].add(expert_out * w[:, None])
+    """(S·K, d) expert-sorted FFN output → (S, d) weighted combine.
+
+    The scatter-add reduction runs in f32 regardless of the buffer dtype
+    (one rounding at the end, not one per addend) — the low-precision
+    payload path depends on this: a bf16/int8-era combine that also
+    accumulated in half precision would stack quantization error on top
+    of summation error."""
+    w = plan.weight.astype(jnp.float32)
+    out = jnp.zeros((num_tokens, expert_out.shape[-1]), jnp.float32)
+    out = out.at[plan.token].add(expert_out.astype(jnp.float32)
+                                 * w[:, None])
+    return out.astype(expert_out.dtype)
 
 
 def dispatch_dense(tokens: jax.Array, plan: DispatchPlan,

@@ -183,11 +183,24 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
             packed = xs0.reshape(1, B, d)              # the sorted buffer
             send_counts = gplan.counts[None]           # (1, E)
         n_src = packed.shape[0]
+        # Wire dtype for the exchange payloads (MegaScale-MoE).  A no-op
+        # without expert parallelism: the exchange is the identity, so
+        # there is no wire to quantize — pure-TP meshes keep full
+        # precision end to end.
+        qdt = cfg.payload_dtype if model_size > 1 else None
 
         def exchange(chunk, counts):
             """Dispatch exchange of one bounded window (identity without
-            expert parallelism)."""
+            expert parallelism).  With ``cfg.payload_dtype`` set the
+            window crosses the mesh quantized (per-source-chunk amax
+            scales riding the count matrix) and arrives dequantized back
+            at the compute dtype — the downstream TP gather / row maps /
+            grouped matmuls are unchanged."""
             if model_size > 1:
+                if qdt is not None:
+                    return alltoall.quantized_exchange(
+                        chunk, counts, model_axis, mode=cfg.a2a,
+                        inner=cfg.a2a_inner, payload_dtype=qdt)
                 return alltoall.grouped_all_to_all(
                     chunk, counts, model_axis,
                     mode=cfg.a2a, inner=cfg.a2a_inner)
@@ -234,6 +247,17 @@ def moe_block_local(cfg: MoEConfig, params: Dict[str, jax.Array], x: jax.Array,
                 # expert-major FFN rows → exchange layout → AllToAll home
                 h = (ys.reshape(model_size, bc, d) if tp is not None
                      else gather(ys, dst_map).reshape(model_size, bc, d))
+                if qdt is not None:
+                    # combine payload quantized like dispatch (the scales
+                    # go over their own tiny flat exchange — no count
+                    # matrix travels this direction) and dequantized to
+                    # f32, so the weighted combine reduction below runs
+                    # in f32 regardless of the compute dtype.
+                    out, _ = alltoall.quantized_exchange(
+                        h, None, model_axis, mode=cfg.a2a,
+                        inner=cfg.a2a_inner, payload_dtype=qdt,
+                        out_dtype=jnp.float32)
+                    return out
                 return alltoall.all_to_all(h, model_axis, mode=cfg.a2a,
                                            inner=cfg.a2a_inner)
             return ys.reshape(1, bc, d)
@@ -362,6 +386,21 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0):
     return jnp.pad(x, widths), n
 
 
+def grouped_a2a_stages(cfg: MoEConfig, model_size: int) -> int:
+    """Equations one payload exchange emits: 1 for flat, 2 for an
+    EFFECTIVE hierarchical a2a (two-stage only when
+    ``1 < a2a_inner < model_size`` divides evenly; otherwise
+    ``core.alltoall`` runs flat).  The lint rules derive their
+    payload-site expectations from this instead of back-solving the
+    total equation count — the quantized path's extra scales exchange
+    made that inversion ambiguous."""
+    if (cfg.a2a == "hierarchical" and 1 < cfg.a2a_inner
+            and model_size % cfg.a2a_inner == 0
+            and model_size // cfg.a2a_inner > 1):
+        return 2
+    return 1
+
+
 def expected_grouped_a2a_eqns(cfg: MoEConfig, model_size: int) -> int:
     """How many ``all_to_all`` equations the grouped dispatch path emits
     per layer application — the single source of truth for the
@@ -369,10 +408,12 @@ def expected_grouped_a2a_eqns(cfg: MoEConfig, model_size: int) -> int:
     witness tests, kept next to the pipeline that emits them.
 
     Per overlap window: one (flat) counts exchange, plus a dispatch and
-    a combine payload exchange of ``stages`` equations each — 1 for flat,
-    2 for an EFFECTIVE hierarchical a2a (two-stage only when
-    ``1 < a2a_inner < model_size``; otherwise ``core.alltoall`` runs
-    flat).  ``overlap_chunks = P`` multiplies everything: the statically
+    a combine payload exchange of :func:`grouped_a2a_stages` equations
+    each.  With ``payload_dtype`` set, the combine direction adds one
+    tiny flat scales exchange per window (the dispatch direction's
+    scales ride the counts exchange as a bitcast column — zero extra
+    equations; see ``alltoall.quantized_grouped_all_to_all``).
+    ``overlap_chunks = P`` multiplies everything: the statically
     unrolled pipeline must emit P separate window exchanges — a ``fori_loop``
     would fold them into ONE loop-body equation (the PR 5 scheduler-
     hiding hazard the lint rule exists to catch).
@@ -385,12 +426,11 @@ def expected_grouped_a2a_eqns(cfg: MoEConfig, model_size: int) -> int:
             "'auto' knobs first (core/tuning.resolve_moe_config)")
     if cfg.dispatch != "grouped" or model_size <= 1:
         return 0
-    stages = 1
-    if (cfg.a2a == "hierarchical" and 1 < cfg.a2a_inner
-            and model_size % cfg.a2a_inner == 0
-            and model_size // cfg.a2a_inner > 1):
-        stages = 2
-    return cfg.overlap_chunks * (1 + 2 * stages)
+    stages = grouped_a2a_stages(cfg, model_size)
+    per_window = 1 + 2 * stages
+    if cfg.payload_dtype is not None:
+        per_window += 1                     # the combine scales exchange
+    return cfg.overlap_chunks * per_window
 
 
 def validate_dispatch_config(cfg: MoEConfig, *, model_size: int,

@@ -7,7 +7,8 @@ batch-size-dependent crossovers (paper Figs. 5–8) — and the serving
 stack compiles many distinct ``(cfg, mesh, shape)`` cells per process,
 each of which deserves its own choice.  This module turns the
 ``MoEConfig`` sentinels (:data:`repro.core.config.AUTO` on ``a2a``,
-``overlap_chunks``, ``grouped_block_m``, ``grouped_ep_bound_factor``)
+``overlap_chunks``, ``grouped_block_m``, ``grouped_ep_bound_factor``,
+``payload_dtype``)
 into a frozen :class:`TunedPlan` per ``(cfg, mesh factoring, static
 token count, dtype)`` cell, scored with the existing α–β cost functions
 (``alltoall.cost_flat`` / ``cost_hierarchical`` / ``cost_pipelined``)
@@ -49,8 +50,17 @@ from repro.core.config import AUTO, MoEConfig
 
 # knobs the resolver owns (a2a_inner rides along with a2a)
 TUNED_KNOBS = ("a2a", "overlap_chunks", "grouped_block_m",
-               "grouped_ep_bound_factor")
+               "grouped_ep_bound_factor", "payload_dtype")
 TUNE_MODES = ("auto", "off", "calibrate")
+
+# payload_dtype="auto" quantizes the wire to int8 only when the α–β
+# model predicts the exchange gets at least this much relatively
+# cheaper.  Small (α-dominated) payloads never clear it — quantize/
+# dequantize work plus the scales exchange would not pay for itself —
+# and fp8 is never auto-picked: it is cheaper than int8 nowhere (same
+# 1-byte wire) and strictly less accurate, so it stays an explicit
+# opt-in for hardware with native fp8 convert paths.
+QUANT_MIN_SAVING = 0.15
 
 # overlap_chunks candidate ladder (filtered to divisors of the bound)
 OVERLAP_LADDER = (1, 2, 4, 8)
@@ -82,6 +92,7 @@ class TunedPlan:
     overlap_chunks: int
     grouped_block_m: Optional[int]
     grouped_ep_bound_factor: Optional[float]
+    payload_dtype: Optional[str]
     fabric: str
     payload_bytes: int
     cost_flat: float
@@ -150,8 +161,19 @@ def _coerce_fabric(fabric) -> Tuple[str, Tuple[LinkSpec, LinkSpec]]:
 # ---------------------------------------------------------------------------
 
 def _dtype_bytes(dtype) -> int:
+    """Itemsize of the compute dtype the payload is exchanged at.
+
+    ``None`` is an error, not a default: silently assuming bf16 (2
+    bytes) mis-scored an f32 run's flat-vs-hierarchical payload by 2×.
+    The choke points (``moe.sharded_moe_apply``, the serving step
+    builders) always know the concrete activation dtype — they must
+    pass it."""
     if dtype is None:
-        return 2                     # bf16, the stack's compute dtype
+        raise ValueError(
+            "_dtype_bytes(None): plan resolution needs the concrete "
+            "activation dtype (payload bytes scale α–β costs); pass "
+            "dtype=x.dtype at the choke point instead of relying on a "
+            "bf16 guess")
     import numpy as np
     try:
         return int(np.dtype(dtype).itemsize)
@@ -185,8 +207,14 @@ def resolve_plan(cfg: MoEConfig, *, model_size: int, tokens_per_shard: int,
                  d_model: int, dtype=None, fabric=None) -> TunedPlan:
     """Resolve one ``(cfg, model_size, tokens_per_shard, d_model, dtype)``
     cell into a frozen :class:`TunedPlan`.  Deterministic and cached;
-    never raises for a valid config (the knobs it emits always pass
-    ``moe.validate_dispatch_config``)."""
+    given a concrete ``dtype`` it never raises for a valid config (the
+    knobs it emits always pass ``moe.validate_dispatch_config``).
+
+    Auto payload policy: ``payload_dtype="auto"`` resolves to
+    ``"int8"`` iff the α–β model predicts the 1-byte wire makes the
+    flat dispatch exchange at least :data:`QUANT_MIN_SAVING` relatively
+    cheaper than at the compute dtype, else ``None`` (lossless).  fp8
+    is explicit-only — see the QUANT_MIN_SAVING note."""
     mode, default_fab = get_tuning()
     fab_name, (fast, slow) = (_coerce_fabric(fabric) if fabric is not None
                               else default_fab)
@@ -222,10 +250,26 @@ def resolve_plan(cfg: MoEConfig, *, model_size: int, tokens_per_shard: int,
         buffer_rows = E * C
         payload = (E * C * d_model * isz) if model_size > 1 else 0
 
+    # knob 0 — payload_dtype: only the grouped-EP exchange quantizes;
+    # everywhere else (TP gather, dense dispatch, model_size == 1) AUTO
+    # resolves to None.  In auto mode, quantize iff the predicted
+    # relative saving of the 1-byte wire clears QUANT_MIN_SAVING —
+    # α-dominated (small) payloads stay lossless.
+    qdt = None if cfg.payload_dtype == AUTO else cfg.payload_dtype
+    if cfg.payload_dtype == AUTO and mode != "off" and ep and payload:
+        full_c = alltoall.cost_flat(payload, model_size, 1, fast, slow)
+        quant_c = alltoall.cost_flat(payload // isz, model_size, 1,
+                                     fast, slow)
+        if full_c > 0 and (full_c - quant_c) / full_c >= QUANT_MIN_SAVING:
+            qdt = "int8"
+    if qdt is not None and ep:
+        payload = payload // isz     # every wire dtype is 1 byte
+
     if mode == "off":
         # pre-refactor defaults, no cost model consulted
         plan = TunedPlan(a2a="flat", a2a_inner=1, overlap_chunks=1,
                          grouped_block_m=None, grouped_ep_bound_factor=factor,
+                         payload_dtype=qdt,
                          fabric=fab_name, payload_bytes=payload,
                          cost_flat=0.0, cost_chosen=0.0,
                          cost_serial=0.0, cost_overlapped=0.0)
@@ -312,7 +356,8 @@ def resolve_plan(cfg: MoEConfig, *, model_size: int, tokens_per_shard: int,
 
     plan = TunedPlan(a2a=a2a_mode, a2a_inner=a2a_inner,
                      overlap_chunks=overlap, grouped_block_m=block_m,
-                     grouped_ep_bound_factor=factor, fabric=fab_name,
+                     grouped_ep_bound_factor=factor,
+                     payload_dtype=qdt, fabric=fab_name,
                      payload_bytes=payload, cost_flat=flat_cost,
                      cost_chosen=chosen_cost, cost_serial=serial,
                      cost_overlapped=overlapped)
@@ -333,6 +378,8 @@ def apply_plan(cfg: MoEConfig, plan: TunedPlan) -> MoEConfig:
         kw["grouped_block_m"] = plan.grouped_block_m
     if cfg.grouped_ep_bound_factor == AUTO:
         kw["grouped_ep_bound_factor"] = plan.grouped_ep_bound_factor
+    if cfg.payload_dtype == AUTO:
+        kw["payload_dtype"] = plan.payload_dtype
     return dataclasses.replace(cfg, **kw) if kw else cfg
 
 
@@ -372,6 +419,8 @@ def describe_resolution(auto_cfg: MoEConfig, resolved: MoEConfig) -> str:
     if auto_cfg.grouped_ep_bound_factor == AUTO:
         parts.append(
             f"grouped_ep_bound_factor={resolved.grouped_ep_bound_factor}")
+    if auto_cfg.payload_dtype == AUTO:
+        parts.append(f"payload_dtype={resolved.payload_dtype!r}")
     return "auto-tuned: resolved " + ", ".join(parts) if parts else ""
 
 

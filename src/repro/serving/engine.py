@@ -101,21 +101,34 @@ def validate_dispatch(dispatch: str) -> str:
     return dispatch
 
 
-def serve_config(cfg: ModelConfig, *, dispatch: Optional[str] = None
-                 ) -> ModelConfig:
-    """The config actually served: ``dispatch`` (when given) overrides
-    the MoE dispatch mode — validated, never silently dropped."""
-    if dispatch is None:
+def serve_config(cfg: ModelConfig, *, dispatch: Optional[str] = None,
+                 payload_dtype: Optional[str] = None) -> ModelConfig:
+    """The config actually served: ``dispatch`` / ``payload_dtype``
+    (when given) override the MoE knobs — validated, never silently
+    dropped.  ``payload_dtype`` quantizes the grouped exchange wire
+    (``MoEConfig.payload_dtype``: a ``PAYLOAD_DTYPES`` member or
+    ``"auto"``); validation happens in ``MoEConfig.__post_init__`` and
+    an ``"auto"`` sentinel resolves at step-BUILD time like every other
+    tuned knob, so the resolved wire dtype joins the compiled-step
+    cache key for free."""
+    if dispatch is None and payload_dtype is None:
         return cfg
-    validate_dispatch(dispatch)
+    if dispatch is not None:
+        validate_dispatch(dispatch)
     if cfg.moe is None:
+        knob = ("dispatch" if dispatch is not None else "payload_dtype")
         raise ValueError(
-            f"dispatch={dispatch!r} requested but {cfg.name} has no MoE "
-            f"layer (cfg.moe is None) — the dispatch mode only applies "
-            f"to MoE architectures")
-    if cfg.moe.dispatch == dispatch:
+            f"{knob}={dispatch or payload_dtype!r} requested but "
+            f"{cfg.name} has no MoE layer (cfg.moe is None) — MoE "
+            f"serving overrides only apply to MoE architectures")
+    kw = {}
+    if dispatch is not None and cfg.moe.dispatch != dispatch:
+        kw["dispatch"] = dispatch
+    if payload_dtype is not None and cfg.moe.payload_dtype != payload_dtype:
+        kw["payload_dtype"] = payload_dtype   # __post_init__ validates
+    if not kw:
         return cfg
-    return cfg.replace(moe=dataclasses.replace(cfg.moe, dispatch=dispatch))
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, **kw))
 
 
 def _tokens_per_shard(mesh, batch: int) -> int:
@@ -302,15 +315,18 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, *, steps: int,
              mesh=None, cache_len: Optional[int] = None,
              temperature: float = 0.0, rng: Optional[jax.Array] = None,
              long_context: bool = False,
-             dispatch: Optional[str] = None) -> jax.Array:
+             dispatch: Optional[str] = None,
+             payload_dtype: Optional[str] = None) -> jax.Array:
     """Greedy/temperature generation.  prompt (B, S) → (B, S+steps).
 
     ``dispatch`` overrides the MoE dispatch mode for serving (validated
-    against ``DISPATCH_MODES``).  Steps come from the compiled-step
-    cache: repeated calls with identical shapes never retrace.
+    against ``DISPATCH_MODES``); ``payload_dtype`` quantizes the
+    grouped exchange wire (see :func:`serve_config`).  Steps come from
+    the compiled-step cache: repeated calls with identical shapes never
+    retrace.
     """
     assert cfg.has_decode, f"{cfg.name} is encoder-only"
-    cfg = serve_config(cfg, dispatch=dispatch)
+    cfg = serve_config(cfg, dispatch=dispatch, payload_dtype=payload_dtype)
     B, S = prompt.shape[:2]
     cache_len = cache_len or (S + steps)
     validate_decode_config(cfg, mesh, B, cache_len=cache_len)

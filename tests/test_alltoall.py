@@ -170,3 +170,136 @@ def test_grouped_a2a_gradient(mesh_model8):
 
     g = jax.jit(jax.grad(loss))(x)
     np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(x), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# a2a_inner validation (bugfix: inner < 1 silently ran the flat path,
+# disabling the paper's hierarchical win with no signal)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inner", [0, -1])
+def test_inner_below_one_raises_naming_the_config_field(inner):
+    x = jnp.zeros((8, 4, 8))
+    with pytest.raises(ValueError, match="a2a_inner"):
+        alltoall.all_to_all(x, "model", mode="hierarchical", inner=inner)
+    with pytest.raises(ValueError, match="a2a_inner"):
+        alltoall.all_to_all(x, "model", mode="flat", inner=inner)
+
+
+def test_inner_one_is_the_documented_degenerate_flat_case(mesh_model8):
+    x = jax.random.normal(RNG, (64, 4, 16))
+    flat = _run(mesh_model8, lambda v: alltoall.flat_all_to_all(v, "model"))
+    deg = _run(mesh_model8, lambda v: alltoall.all_to_all(
+        v, "model", mode="hierarchical", inner=1))
+    np.testing.assert_array_equal(np.asarray(flat(x)), np.asarray(deg(x)))
+
+
+# ---------------------------------------------------------------------------
+# quantized exchange (payload_dtype): wire dtype, scales, round trips
+# ---------------------------------------------------------------------------
+
+# |dequant(quantize(x)) - x| <= tol · chunk_amax — grid-step bounds:
+# int8 rounds to a 1/127 grid (half-step 0.004); float8_e4m3fn carries
+# 3 mantissa bits (rel. step 2^-3, half-step ~6% of the element);
+# float8_e5m2 carries 2 (half-step ~12.5%).
+QUANT_TOLS = {
+    "int8": 0.005,
+    "float8_e4m3fn": 0.07,
+    "float8_e5m2": 0.15,
+}
+
+
+@pytest.mark.parametrize("qdt", sorted(alltoall.PAYLOAD_QMAX))
+def test_quantize_payload_round_trip_within_grid_step(qdt):
+    chunk_mag = jnp.array([0.1, 1.0, 10.0, 100.0])    # scale-varied chunks
+    x = jax.random.normal(RNG, (4, 16, 32)) * chunk_mag[:, None, None]
+    q, s = alltoall.quantize_payload(x, qdt)
+    assert q.dtype == jnp.dtype(qdt)
+    assert s.shape == (4,) and s.dtype == jnp.float32
+    y = np.asarray(alltoall.dequantize_payload(q, s, jnp.float32))
+    xf = np.asarray(x, np.float32)
+    amax = np.max(np.abs(xf), axis=(1, 2), keepdims=True)
+    assert np.all(np.abs(y - xf) <= QUANT_TOLS[qdt] * amax)
+
+
+def test_quantize_payload_zero_chunk_round_trips_exactly():
+    q, s = alltoall.quantize_payload(jnp.zeros((2, 8, 4)), "int8")
+    np.testing.assert_array_equal(np.asarray(s), 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(alltoall.dequantize_payload(q, s, jnp.float32)), 0.0)
+
+
+def test_unknown_payload_dtype_raises():
+    with pytest.raises(ValueError, match="payload"):
+        alltoall.quantize_payload(jnp.zeros((2, 4, 4)), "int4")
+
+
+@pytest.mark.parametrize("mode,inner", [("flat", 1), ("hierarchical", 2)])
+@pytest.mark.parametrize("qdt", ["int8", "float8_e4m3fn"])
+def test_quantized_exchange_matches_unquantized(mesh_model8, qdt, mode,
+                                                inner):
+    """Same chunk permutation as grouped_all_to_all; counts cross EXACTLY
+    (the scales ride as a bitcast int32 column of the count exchange);
+    tokens agree within the per-chunk grid step."""
+    M, B, d, E_local = 8, 4, 16, 2
+    x = jax.random.normal(RNG, (M * M, B, d))
+    counts = jnp.arange(M * M * E_local, dtype=jnp.int32).reshape(
+        M * M, E_local)
+
+    def run(f):
+        return jax.jit(shard_map(
+            f, mesh=mesh_model8, in_specs=(P("model"), P("model")),
+            out_specs=(P("model"), P("model")), check_vma=False))(x, counts)
+
+    rx, rc = run(lambda v, c: alltoall.grouped_all_to_all(
+        v, c, "model", mode=mode, inner=inner))
+    qx, qc = run(lambda v, c: alltoall.quantized_exchange(
+        v, c, "model", mode=mode, inner=inner, payload_dtype=qdt))
+    np.testing.assert_array_equal(np.asarray(rc), np.asarray(qc))
+    assert qx.dtype == x.dtype                 # dequantized on arrival
+    rxf = np.asarray(rx, np.float32)
+    amax = np.max(np.abs(rxf), axis=(1, 2), keepdims=True)
+    assert np.all(np.abs(np.asarray(qx, np.float32) - rxf)
+                  <= QUANT_TOLS[qdt] * amax)
+
+
+def test_quantized_exchange_combine_direction_returns_f32(mesh_model8):
+    """counts=None (combine direction): scales go over their own tiny
+    flat exchange and the result lands in f32 so the combine reduction
+    accumulates at full precision."""
+    x = jax.random.normal(RNG, (64, 4, 8), dtype=jnp.bfloat16)
+
+    def fn(v):
+        out, rc = alltoall.quantized_exchange(
+            v, None, "model", payload_dtype="int8", out_dtype=jnp.float32)
+        assert rc is None
+        return out
+
+    out = _run(mesh_model8, fn)(x)
+    assert out.dtype == jnp.float32
+    ref = np.asarray(_run(mesh_model8, lambda v: alltoall.flat_all_to_all(
+        v, "model"))(x), np.float32)
+    amax = np.max(np.abs(ref), axis=(1, 2), keepdims=True)
+    assert np.all(np.abs(np.asarray(out) - ref) <= 0.01 * amax)
+
+
+def test_quantized_exchange_gradient_is_quantized_involution(mesh_model8):
+    """d/dx sum(a2a(x)^2) = 2x for a permutation; the quantized VJP
+    sends the cotangent through the SAME low-precision wire, so the
+    gradient matches to two grid steps — and never recomputes the
+    forward (the residuals carry only the count matrix)."""
+    x = jax.random.normal(RNG, (64, 4, 8))
+    counts = jnp.ones((64, 2), jnp.int32)
+
+    def loss(v):
+        out, _ = shard_map(
+            lambda u, c: alltoall.quantized_exchange(
+                u, c, "model", mode="hierarchical", inner=4,
+                payload_dtype="int8"),
+            mesh=mesh_model8, in_specs=(P("model"), P("model")),
+            out_specs=(P("model"), P("model")), check_vma=False)(v, counts)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    g = np.asarray(jax.jit(jax.grad(loss))(x))
+    ref = 2 * np.asarray(x)
+    assert np.abs(g - ref).max() <= 0.03 * np.abs(ref).max()

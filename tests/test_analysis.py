@@ -137,7 +137,7 @@ def test_known_bad_tuned_plan_consistency(mesh_ep4):
                             dtype=jnp.float32)
     x = jax.random.normal(RNG, (4, 16, 32))
     ctx = {"cfg": auto, "model_size": 4, "tokens_per_shard": 16,
-           "d_model": 32, "direction": "fwd"}
+           "d_model": 32, "direction": "fwd", "dtype": jnp.float32}
     g = analysis.trace_graph(
         lambda p_, v: moe.sharded_moe_apply(mesh_ep4, concrete, p_, v,
                                             num_experts=8, act="swiglu"),
@@ -158,6 +158,42 @@ def test_known_bad_tuned_plan_consistency(mesh_ep4):
     # concrete-config cells stay owned by overlap-chunk-count
     g.context["cfg"] = concrete
     assert analysis.run_rule("tuned-plan-consistency", g) == []
+
+
+def test_known_bad_payload_dtype(mesh_ep4):
+    """PR 10, both failure directions.  A full-width (f32) exchange
+    linted against an ``payload_dtype="int8"`` contract means the
+    quantize/dequantize pair was dropped; an int8 exchange linted
+    against a payload-unset contract means low-precision wire dtypes
+    are leaking where the config promises the compute dtype."""
+    import dataclasses
+    full = MoEConfig(num_experts=8, dispatch="grouped", gate="topk",
+                     top_k=2, capacity_factor=8.0)
+    quant = dataclasses.replace(full, payload_dtype="int8")
+    p = moe.init_moe_params(RNG, full, 32, 64, 8, act="swiglu",
+                            dtype=jnp.float32)
+    x = jax.random.normal(RNG, (4, 16, 32))
+    ctx = lambda cfg: {"cfg": cfg, "model_size": 4, "tokens_per_shard": 16,
+                       "d_model": 32, "direction": "fwd",
+                       "dtype": jnp.float32}
+    trace = lambda cfg, c: analysis.trace_graph(
+        lambda p_, v: moe.sharded_moe_apply(mesh_ep4, cfg, p_, v,
+                                            num_experts=8, act="swiglu"),
+        p, x, context=ctx(c))
+
+    # quantization promised but never applied: every payload window is
+    # still full-width on the wire
+    findings = analysis.run_rule("payload-dtype", trace(full, quant))
+    assert findings and all(f.level == "error" for f in findings)
+    assert all("quantize/dequantize pair" in f.message for f in findings)
+    assert any("int8" in f.message and "float32" in f.message
+               for f in findings)
+    # the reverse leak: int8 on a wire the config says is full-width
+    findings = analysis.run_rule("payload-dtype", trace(quant, full))
+    assert findings and all("int8" in f.message for f in findings)
+    # positive controls: graph and contract agree, both ways
+    assert analysis.run_rule("payload-dtype", trace(quant, quant)) == []
+    assert analysis.run_rule("payload-dtype", trace(full, full)) == []
 
 
 def test_known_bad_no_recompute_backward():
@@ -349,7 +385,13 @@ def test_matrix_covers_the_contracted_shapes():
                  # the auto decode cell (step-BUILD-time resolution)
                  "grouped/r1/auto/Pauto", "grouped/ep4/auto/Pauto",
                  "grouped/tp2/auto/Pauto", "grouped/ep2tp2/auto/Pauto",
-                 "decode/ep4/grouped/Pauto"):
+                 "decode/ep4/grouped/Pauto",
+                 # PR 10: quantized-wire cells (int8 + one fp8) across
+                 # flat/hier, P=1/2, EP and EP×TP, plus a decode cell
+                 "grouped/ep4/flat/P1/int8", "grouped/ep4/flat/P2/int8",
+                 "grouped/ep4/hier/P1/float8_e4m3fn",
+                 "grouped/ep2tp2/flat/P2/int8",
+                 "decode/ep4/grouped/P1/int8"):
         assert want in cells
     # hier cells only exist where a model axis exists to factorize
     assert not any("/r1/hier/" in c or "/tp2/hier/" in c for c in cells)

@@ -248,3 +248,47 @@ def test_grouped_tp_token_padding_path(mesh_dm22):
     assert bool(jnp.all(jnp.isfinite(yg)))
     np.testing.assert_allclose(np.asarray(yg), np.asarray(ys),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantized exchange wire (PR 10) × TP: the int8/fp8 payload composes
+# with expert tensor parallelism on the (data=2, model=2) mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qdt,out_tol,grad_tol", [
+    ("int8", 5e-2, 1e-1),
+    ("float8_e4m3fn", 1.5e-1, 3e-1),
+])
+def test_grouped_tp_ep_quantized_payload_fwd_and_grad(mesh_dm22, qdt,
+                                                      out_tol, grad_tol):
+    """Quantization touches only the model-axis exchange, so under TP
+    over ``data`` the f-sliced grouped matmuls and their collectives
+    must be reused unchanged: value and parameter gradients stay within
+    the same per-dtype budgets as the EP-only cells (see
+    test_grouped.QWIRE_TOLS for the measured medians)."""
+    x = jax.random.normal(RNG, (4, 16, D))
+    runs = {}
+    for pd in (None, qdt):
+        cfg = _cfg("grouped", gate="switch", top_k=1, capacity_factor=4.0,
+                   payload_dtype=pd)
+        p = _params(cfg)
+
+        def loss(p, v, cfg=cfg):
+            y, aux, _ = moe.sharded_moe_apply(
+                mesh_dm22, cfg, p, v, num_experts=E, act="swiglu",
+                expert_tp_axis="data")
+            return jnp.sum(y ** 2) + aux, y
+
+        (l, y), g = jax.jit(jax.value_and_grad(loss, has_aux=True))(p, x)
+        runs[pd] = (float(l), np.asarray(y, np.float32),
+                    {k: np.asarray(v, np.float32) for k, v in g.items()})
+
+    l0, y0, g0 = runs[None]
+    lq, yq, gq = runs[qdt]
+    assert abs(lq - l0) / abs(l0) < out_tol
+    assert np.linalg.norm(yq - y0) / np.linalg.norm(y0) < out_tol
+    for k in g0:
+        assert np.all(np.isfinite(gq[k])), k
+        assert np.linalg.norm(gq[k]) > 0, k
+        err = np.linalg.norm(gq[k] - g0[k]) / np.linalg.norm(g0[k])
+        assert err < grad_tol, (qdt, k, err)

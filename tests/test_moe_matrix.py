@@ -33,6 +33,15 @@ D = 16
 TOL = {"float32": dict(rtol=1e-4, atol=1e-5),
        "bfloat16": dict(rtol=2e-2, atol=2e-2)}
 
+# Quantized-exchange cells (payload_dtype set): the dispatch AND combine
+# payloads each take one trip through the low-precision wire, so the
+# output error is bounded by two per-chunk grid steps amplified by the
+# FFN's Lipschitz factor.  Measured on this matrix (f32 compute):
+# int8 lands near 1–2% relative, float8_e4m3fn (3 mantissa bits) near
+# 3–5%; the tolerances below leave ~3× headroom over those medians.
+QTOL = {"int8": dict(rtol=5e-2, atol=5e-2),
+        "float8_e4m3fn": dict(rtol=1.5e-1, atol=1.5e-1)}
+
 
 def _gate_kwargs(rs, gate, E):
     kw = {}
@@ -66,10 +75,14 @@ def _dense_reference(cfg, params, x, rng, tid, act="swiglu"):
     return out
 
 
-def _run_case(mesh, gate, E, kw, S, dtype, a2a, seed):
+def _run_case(mesh, gate, E, kw, S, dtype, a2a, seed, payload_dtype=None):
     """One matrix draw: dense / sort / grouped / grouped+overlap on the
     given mesh, all against the dispatch='dense' output (and, on the
-    single-device mesh, against the explicit per-token reference)."""
+    single-device mesh, against the explicit per-token reference).
+    With ``payload_dtype`` set, quantized grouped and grouped+overlap
+    cells join the draw: within ``QTOL`` of dense on EP meshes, and
+    BITWISE equal to the unquantized grouped cell when model_size == 1
+    (the documented no-op — no exchange, nothing to quantize)."""
     base = dict(num_experts=E, gate=gate, capacity_factor=8.0,
                 a2a=a2a, a2a_inner=2, **kw)
     key = jax.random.PRNGKey(seed)
@@ -89,12 +102,17 @@ def _run_case(mesh, gate, E, kw, S, dtype, a2a, seed):
          else capacity.grouped_tp_gather_bound(cfg0, T_local))
     P = next(p for p in (4, 2, 1) if B % p == 0)
 
+    modes = [("dense", {"dispatch": "dense"}),
+             ("sort", {"dispatch": "sort"}),
+             ("grouped", {"dispatch": "grouped"}),
+             ("overlap", {"dispatch": "grouped", "overlap_chunks": P})]
+    if payload_dtype is not None:
+        modes += [("qgrouped", {"dispatch": "grouped",
+                                "payload_dtype": payload_dtype}),
+                  ("qoverlap", {"dispatch": "grouped", "overlap_chunks": P,
+                                "payload_dtype": payload_dtype})]
     ys, auxes = {}, {}
-    for name, over in (("dense", {"dispatch": "dense"}),
-                       ("sort", {"dispatch": "sort"}),
-                       ("grouped", {"dispatch": "grouped"}),
-                       ("overlap", {"dispatch": "grouped",
-                                    "overlap_chunks": P})):
+    for name, over in modes:
         cfg = MoEConfig(**{**base, **over})
         y, aux, _ = jax.jit(lambda p, v, cfg=cfg: moe.sharded_moe_apply(
             mesh, cfg, p, v, num_experts=E, act="swiglu", rng=rng,
@@ -108,6 +126,24 @@ def _run_case(mesh, gate, E, kw, S, dtype, a2a, seed):
             ys[name], ys["dense"], err_msg=f"{gate}/{name} vs dense", **tol)
         np.testing.assert_allclose(auxes[name], auxes["dense"], rtol=1e-5,
                                    err_msg=f"{gate}/{name} aux")
+    if payload_dtype is not None:
+        qtol = {k: max(v, TOL[jnp.dtype(dtype).name][k])
+                for k, v in QTOL[payload_dtype].items()}
+        for name in ("qgrouped", "qoverlap"):
+            if M > 1:
+                np.testing.assert_allclose(
+                    ys[name], ys["dense"],
+                    err_msg=f"{gate}/{name}[{payload_dtype}] vs dense",
+                    **qtol)
+            else:
+                # model_size == 1: payload_dtype is a documented no-op
+                np.testing.assert_array_equal(
+                    ys[name], ys[name.lstrip("q")],
+                    err_msg=f"{gate}/{name}[{payload_dtype}] must be a "
+                            f"no-op on the 1-rank mesh")
+            np.testing.assert_allclose(
+                auxes[name], auxes["dense"], rtol=1e-5,
+                err_msg=f"{gate}/{name}[{payload_dtype}] aux")
     if n_dev == 1:
         ref = np.asarray(_dense_reference(cfg0, params, x, rng, tid),
                          np.float32)
@@ -167,3 +203,29 @@ def test_routing_equivalence_hypothesis(data, mesh_ep4):
     a2a = data.draw(st.sampled_from(["flat", "hierarchical"]))
     seed = data.draw(st.integers(0, 2 ** 16))
     _run_case(mesh_ep4, gate, E, kw, S, dtype, a2a, seed)
+
+
+# ---------------------------------------------------------------------------
+# quantized payload cells (PR 10): int8 / fp8 exchange wire, f32 compute.
+# mesh1 pins the documented no-op (bitwise equal to unquantized grouped);
+# mesh_ep4 exercises the EP exchange; mesh_dm22 adds a data axis so the
+# token sharding and the 2-way model exchange compose.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("i,qdt,mesh_name", [
+    (0, "int8", "mesh1"),
+    (1, "int8", "mesh_ep4"),
+    (2, "int8", "mesh_dm22"),
+    (3, "float8_e4m3fn", "mesh_ep4"),
+    (4, "float8_e4m3fn", "mesh_dm22"),
+])
+def test_routing_equivalence_quantized_payload(i, qdt, mesh_name, request):
+    mesh = request.getfixturevalue(mesh_name)
+    rs = np.random.RandomState(5100 + i)
+    gate = GATE_STRATEGIES[int(rs.randint(len(GATE_STRATEGIES)))]
+    E = int(rs.choice([8, 16]))
+    kw = _gate_kwargs(rs, gate, E)
+    S = int(rs.randint(5, 48))
+    a2a = ["flat", "hierarchical"][int(rs.randint(2))]
+    _run_case(mesh, gate, E, kw, S, "float32", a2a, seed=1300 + i,
+              payload_dtype=qdt)

@@ -148,6 +148,23 @@ def test_dispatch_override_validated():
     assert got.moe.dispatch == "grouped"
 
 
+def test_payload_dtype_override_validated():
+    """PR 10: ``serve_config(payload_dtype=)`` threads the quantized
+    exchange wire through MoEConfig validation — bad names raise naming
+    the knob, matching overrides stay the identity config."""
+    cfg = configs.smoke_config("dbrx-132b")
+    with pytest.raises(ValueError, match="payload_dtype"):
+        engine.serve_config(cfg, payload_dtype="int7")
+    got = engine.serve_config(cfg, dispatch="grouped", payload_dtype="int8")
+    assert got.moe.dispatch == "grouped"
+    assert got.moe.payload_dtype == "int8"
+    assert engine.serve_config(got, payload_dtype="int8") is got
+    # dense architectures have no wire to quantize
+    dense = configs.smoke_config("starcoder2-3b")
+    with pytest.raises(ValueError, match="payload_dtype"):
+        engine.serve_config(dense, payload_dtype="int8")
+
+
 def test_dispatch_override_rejected_for_dense_arch(mesh1):
     cfg = configs.smoke_config("starcoder2-3b")
     p = T.init_model(RNG, cfg)

@@ -175,7 +175,8 @@ def test_configure_cli_modes():
     assert (mode, fab) == ("off", "pcie_eth100")
     # "off" pins the static defaults: resolution keeps flat/P1
     plan = tuning.resolve_plan(_auto_cfg(), model_size=4,
-                               tokens_per_shard=16, d_model=32)
+                               tokens_per_shard=16, d_model=32,
+                               dtype="bfloat16")
     assert plan.a2a == "flat" and plan.overlap_chunks == 1
     mode, fab = tuning.configure("auto", "ici_dcn")
     assert (mode, fab) == ("auto", "ici_dcn")
@@ -291,3 +292,101 @@ def test_auto_sentinel_accepted_by_config_validation():
         MoEConfig(num_experts=8, a2a="fastest")
     with pytest.raises(ValueError):
         MoEConfig(num_experts=8, overlap_chunks="turbo")
+
+
+# ---------------------------------------------------------------------------
+# dtype is load-bearing: no silent bf16 guess, f32 vs bf16 cross over
+# ---------------------------------------------------------------------------
+
+def test_dtype_bytes_raises_on_none_and_knows_the_wire_dtypes():
+    with pytest.raises(ValueError, match="dtype"):
+        tuning._dtype_bytes(None)
+    assert tuning._dtype_bytes("float32") == 4
+    assert tuning._dtype_bytes("bfloat16") == 2
+    assert tuning._dtype_bytes("int8") == 1
+
+
+def test_resolve_plan_requires_a_concrete_dtype():
+    with pytest.raises(ValueError, match="dtype"):
+        tuning.resolve_plan(_auto_cfg(), model_size=4, tokens_per_shard=64,
+                            d_model=128)
+
+
+def test_f32_and_bf16_resolve_different_plans_at_the_crossover():
+    """The 2-byte guess the old _dtype_bytes(None) made is exactly a
+    factor-2 payload error: near the flat/hierarchical crossover, f32
+    (4 B) and bf16 (2 B) runs of the SAME cell must resolve to
+    DIFFERENT plans — f32 hits the flat regime one octave earlier."""
+    fab = ("synthetic", (LinkSpec(1e-6, 1.0 / 50e9),
+                         LinkSpec(1e-5, 1.0 / 6.25e9)))
+    diff = None
+    for exp in range(4, 18):
+        kw = dict(model_size=4, tokens_per_shard=2 ** exp, d_model=128,
+                  fabric=fab)
+        p32 = tuning.resolve_plan(_auto_cfg(), dtype="float32", **kw)
+        p16 = tuning.resolve_plan(_auto_cfg(), dtype="bfloat16", **kw)
+        assert p32.payload_bytes == 2 * p16.payload_bytes
+        if p32.a2a != p16.a2a:
+            diff = (p32, p16)
+            break
+    assert diff is not None, "no T where the f32 and bf16 plans differ"
+    assert diff[0].a2a == "flat" and diff[1].a2a == "hierarchical"
+
+
+# ---------------------------------------------------------------------------
+# payload_dtype="auto": quantize only when β dominates
+# ---------------------------------------------------------------------------
+
+def test_payload_auto_quantizes_beta_dominated_payloads():
+    cfg = _auto_cfg(payload_dtype="auto")
+    big = tuning.resolve_plan(cfg, model_size=4, tokens_per_shard=4096,
+                              d_model=4096, dtype="bfloat16",
+                              fabric="ici_dcn")
+    assert big.payload_dtype == "int8"
+    # the plan's wire bytes reflect the 1-byte payload (bf16 halved)
+    unq = tuning.resolve_plan(_auto_cfg(), model_size=4,
+                              tokens_per_shard=4096, d_model=4096,
+                              dtype="bfloat16", fabric="ici_dcn")
+    assert 2 * big.payload_bytes == unq.payload_bytes
+
+
+def test_payload_auto_stays_lossless_when_alpha_dominates():
+    cfg = _auto_cfg(payload_dtype="auto")
+    small = tuning.resolve_plan(cfg, model_size=4, tokens_per_shard=1,
+                                d_model=8, dtype="bfloat16",
+                                fabric="ici_dcn")
+    assert small.payload_dtype is None
+
+
+def test_payload_auto_is_none_without_an_ep_exchange():
+    cfg = _auto_cfg(payload_dtype="auto")
+    # model_size == 1: the exchange is an identity — nothing to quantize
+    plan = tuning.resolve_plan(cfg, model_size=1, tokens_per_shard=4096,
+                               d_model=4096, dtype="bfloat16",
+                               fabric="ici_dcn")
+    assert plan.payload_dtype is None
+    resolved = tuning.resolve_moe_config(
+        cfg, model_size=1, tokens_per_shard=4096, d_model=4096,
+        dtype="bfloat16")
+    assert resolved.payload_dtype is None
+
+
+def test_payload_auto_off_mode_and_explicit_pass_through():
+    tuning.set_tuning(mode="off")
+    plan = tuning.resolve_plan(_auto_cfg(payload_dtype="auto"),
+                               model_size=4, tokens_per_shard=4096,
+                               d_model=4096, dtype="bfloat16")
+    assert plan.payload_dtype is None         # off = pre-quantization
+    tuning.set_tuning(mode="auto")
+    # an explicit fp8 choice is honored verbatim, never "upgraded"
+    plan = tuning.resolve_plan(_auto_cfg(payload_dtype="float8_e4m3fn"),
+                               model_size=4, tokens_per_shard=16,
+                               d_model=32, dtype="bfloat16",
+                               fabric="ici_dcn")
+    assert plan.payload_dtype == "float8_e4m3fn"
+    resolved = tuning.resolve_moe_config(
+        _auto_cfg(payload_dtype="auto"), model_size=4,
+        tokens_per_shard=4096, d_model=4096, dtype="bfloat16")
+    assert resolved.payload_dtype == "int8"
+    assert "payload_dtype" in tuning.describe_resolution(
+        _auto_cfg(payload_dtype="auto"), resolved)
